@@ -1,0 +1,60 @@
+"""Device-side exploration benchmark: N-branch fork/explore/commit cost
+inside one jitted program (speculative-training primitive).
+
+Measures the per-round overhead of fork_stacked + vmap(step) +
+first_commit_wins vs. running the same step once — the cost of
+parallelism when branches map onto spare accelerator capacity.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import explore
+
+
+def run() -> List[Tuple[str, float, str]]:
+    dim = 256
+    origin = {"w": jnp.zeros((dim, dim)), "loss": jnp.float32(1e9)}
+    target = jax.random.normal(jax.random.PRNGKey(0), (dim, dim))
+
+    def loss(w):
+        return jnp.mean((w - target) ** 2)
+
+    def step(state, key):
+        g = jax.grad(loss)(state["w"])
+        lr = 0.05 + 0.1 * jax.random.uniform(key)
+        w = state["w"] - lr * g
+        l = loss(w)
+        return {"w": w, "loss": l}, l < state["loss"], l
+
+    rows = []
+
+    def timed(jitted, reps=50):
+        out = jitted(origin, jnp.int32(0))  # compile
+        jax.block_until_ready(out["w"])
+        t0 = time.perf_counter()
+        for i in range(reps):
+            out = jitted(origin, jnp.int32(i))
+        jax.block_until_ready(out["w"])
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    base = jax.jit(lambda s, i: step(
+        s, jax.random.fold_in(jax.random.PRNGKey(1), i))[0])
+    t_single = timed(base)
+    rows.append(("single_step_us", t_single, "no-branching"))
+
+    for n in (2, 4, 8):
+        run_explore = jax.jit(
+            lambda o, i, n=n: explore(
+                step, o, n, jax.random.fold_in(jax.random.PRNGKey(2), i),
+                commit_time_fn=lambda a: a).state)
+        us = timed(run_explore)
+        rows.append((f"explore_{n}branch_us", us,
+                     f"overhead={us / t_single:.2f}x"))
+    return rows

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Tables:
+  T4 (creation O(1))      -> branch_create
+  T5 (commit ∝ Δ)        -> commit_abort
+  T6 (throughput)         -> throughput
+  serving-scale branching -> kvbranch_bench
+  in-program exploration  -> explore_bench
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        branch_create,
+        commit_abort,
+        explore_bench,
+        kvbranch_bench,
+        throughput,
+    )
+
+    modules = [
+        ("branch_create", branch_create),
+        ("commit_abort", commit_abort),
+        ("throughput", throughput),
+        ("kvbranch_bench", kvbranch_bench),
+        ("explore_bench", explore_bench),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            for row, value, derived in mod.run():
+                print(f"{name}.{row},{value:.3f},{derived}")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

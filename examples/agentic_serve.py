@@ -1,0 +1,69 @@
+"""Agentic exploration over generations — the paper's serving workload.
+
+A Tree-of-Thoughts style search: fork N continuation branches from a
+shared prompt (CoW KV pages), decode each, score them, commit the best
+(first-commit-wins invalidates + recycles the siblings), then explore
+nested sub-branches from the winner.
+
+Run:  PYTHONPATH=src python examples/agentic_serve.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.runtime.serve_loop import ServeEngine
+
+
+def branch_score(engine: ServeEngine, seq: int, prompt_len: int) -> float:
+    """Score a branch: mean of its generated token ids as a stand-in for
+    a task reward (in production: a verifier / unit tests / reward
+    model)."""
+    gen = engine.tokens(seq)[prompt_len:]
+    return float(np.mean(gen)) if gen else 0.0
+
+
+def explore_level(engine, parent, n_branches, n_tokens, key, prompt_len):
+    branches = engine.fork(parent, n_branches)
+    for i in range(n_tokens):
+        key, k = jax.random.split(key)
+        engine.decode(branches, greedy=False, temperature=2.0, key=k)
+    scores = [branch_score(engine, b, prompt_len) for b in branches]
+    ranked = sorted(zip(scores, branches), reverse=True)
+    best = ranked[0][1]
+    print(f"  scores: {[f'{s:.1f}' for s, _ in ranked]} -> "
+          f"committing branch {best}")
+    for _, b in ranked[1:]:
+        pass  # losers are invalidated by the winner's commit
+    engine.commit(best)
+    return key
+
+
+def main():
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, num_pages=512, page_size=8,
+                         max_pages_per_seq=32)
+
+    prompt = [7, 3, 9, 21, 14, 2]
+    root = engine.add_request(prompt)
+    key = jax.random.PRNGKey(42)
+
+    print(f"prompt: {prompt}")
+    print(f"pool before: {engine.stats()}")
+    for level in range(3):
+        print(f"level {level}: fork 3 branches, decode 4 tokens each")
+        key = explore_level(engine, root, n_branches=3, n_tokens=4,
+                            key=key, prompt_len=len(prompt))
+        print(f"  committed length: {len(engine.tokens(root))}, "
+              f"pool: {engine.stats()}")
+    print(f"final sequence: {engine.tokens(root)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Quickstart: the paper's Listing 2 (fork / explore / commit) in branchx.
+
+Three state domains, one abstraction:
+  1. host pytree state (BranchStore)        — ≈ BranchFS
+  2. on-disk workspace (BranchFS)           — ≈ BranchFS daemon
+  3. in-program stacked state (explore())   — ≈ branch() + BR_MEMORY
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    BranchStore,
+    StaleBranchError,
+    explore,
+    explore_threads,
+)
+from repro.fs import BranchFS
+
+
+def demo_store():
+    print("== 1. BranchStore: three candidate fixes, tests pick one ==")
+    store = BranchStore({"main.py": "print('broken')", "README": "v1"})
+
+    def make_fix(i):
+        def fix(branch_id):
+            store.write(branch_id, "main.py", f"print('fix {i}')")
+            tests_pass = i == 1  # only fix 1 passes its tests
+            return tests_pass
+
+        return fix
+
+    winner, statuses = explore_threads(
+        store, BranchStore.ROOT, [make_fix(0), make_fix(1), make_fix(2)])
+    print(f"   winner branch: {winner}, statuses: "
+          f"{[s.value for s in statuses]}")
+    print(f"   base now sees: {store.read(BranchStore.ROOT, 'main.py')}")
+
+
+def demo_fs():
+    print("== 2. BranchFS on disk: nested exploration ==")
+    with tempfile.TemporaryDirectory() as td:
+        fs = BranchFS(td)
+        fs.write("base", "config.yaml", b"lr: 1e-4")
+        (strategy,) = fs.create(name="strategy-a")
+        v1, v2 = fs.create(parent=strategy, n=2)
+        fs.write(v1, "config.yaml", b"lr: 3e-4")
+        fs.write(v2, "config.yaml", b"lr: 1e-3")
+        fs.commit(v2)               # sub-variant wins -> strategy-a
+        try:
+            fs.read(v1, "config.yaml")
+        except StaleBranchError:
+            print("   sibling v1 got -ESTALE (as the paper specifies)")
+        fs.commit(strategy)         # strategy-a wins -> base
+        print(f"   base config: {fs.read('base', 'config.yaml').decode()}")
+
+
+def demo_device():
+    print("== 3. Device-side explore(): 4 branches race inside one jit ==")
+    origin = {"x": jnp.zeros((3,)), "loss": jnp.float32(1e9)}
+
+    def step(state, key):
+        cand = jax.random.normal(key, (3,))
+        loss = jnp.sum(cand**2)
+        return {"x": cand, "loss": loss}, loss < state["loss"], loss
+
+    res = jax.jit(lambda o, k: explore(step, o, 4, k,
+                                       commit_time_fn=lambda a: a))(
+        origin, jax.random.PRNGKey(0))
+    print(f"   committed branch {int(res.winner)} with loss "
+          f"{float(res.state['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    demo_store()
+    demo_fs()
+    demo_device()
+    print("quickstart complete")

@@ -1,0 +1,17 @@
+"""branchx — branch contexts (fork/explore/commit) for JAX/TPU.
+
+Implements *Fork, Explore, Commit: OS Primitives for Agentic
+Exploration* (CS.OS 2026) as a production training/serving framework:
+
+* :mod:`repro.core`      — branch contexts over pytrees, paged KV, and
+  in-program exploration with first-commit-wins.
+* :mod:`repro.fs`        — durable BranchFS (delta checkpoints).
+* :mod:`repro.models`    — all 10 assigned architectures.
+* :mod:`repro.kernels`   — Pallas TPU kernels (paged attention, flash
+  attention, SSD scan) with jnp oracles.
+* :mod:`repro.runtime`   — fault-tolerant training, branchable serving.
+* :mod:`repro.launch`    — production meshes, multi-pod dry-run,
+  roofline analysis.
+"""
+
+__version__ = "1.0.0"

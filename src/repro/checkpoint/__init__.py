@@ -1,0 +1,9 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.serialization import (
+    leaf_from_bytes,
+    leaf_to_bytes,
+    tree_paths,
+)
+
+__all__ = ["CheckpointManager", "leaf_from_bytes", "leaf_to_bytes",
+           "tree_paths"]

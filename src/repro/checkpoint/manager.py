@@ -1,0 +1,130 @@
+"""Branch-aware delta checkpointing on BranchFS.
+
+Every checkpoint is a BranchFS branch committed into ``base``:
+
+* **delta economics** — leaves are content-addressed chunks, so a step-N
+  checkpoint stores only leaves that changed since step N-1 (optimizer
+  `step` scalar, updated weights...).  Unchanged leaves (frozen embeddings,
+  data config) cost one manifest entry.  This is the paper's
+  modification-proportional commit, measured in benchmarks/commit_abort.
+* **fsync elision** — leaf writes go to an uncommitted branch (no fsync);
+  the commit is the durability point, exactly BranchFS §6 semantics.
+* **async** — ``save_async`` snapshots device arrays to host (blocking
+  only for the device→host copy) and writes/commits on a background
+  thread, overlapping serialization with the next train step.
+* **mesh-free** — leaves are stored logically (full arrays), so restore
+  can re-shard onto any mesh (elastic re-scale path, runtime/elastic.py).
+* **speculative checkpoints** — an *uncommitted* branch per step enables
+  cheap rollback: abort on NaN, commit on health check (runtime/fault.py).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.serialization import leaf_from_bytes, leaf_to_bytes
+from repro.fs.branchfs import BASE, BranchFS
+
+
+class CheckpointManager:
+    def __init__(self, root: str | Path, compress: bool = False):
+        self.fs = BranchFS(root)
+        self.compress = compress
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def _write_tree(self, branch: str, step: int, tree: Any,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        for path, leaf in flat:
+            key = f"step{step:012d}/{jax.tree_util.keystr(path)}"
+            self.fs.write(branch, key, leaf_to_bytes(leaf, self.compress))
+        meta = {"step": step, "extra": extra or {}}
+        self.fs.write(branch, f"step{step:012d}/__meta__",
+                      json.dumps(meta).encode())
+        self.fs.write(branch, "__latest__", str(step).encode())
+
+    def _branch_name(self, step: int, tag: str) -> str:
+        import uuid
+
+        return f"ckpt-{step}-{tag}-{uuid.uuid4().hex[:8]}"
+
+    def save(self, step: int, tree: Any,
+             extra: Optional[Dict[str, Any]] = None) -> str:
+        """Synchronous save: branch → write leaves → commit (durable)."""
+        (branch,) = self.fs.create(name=self._branch_name(step, "s"))
+        self._write_tree(branch, step, tree, extra)
+        self.fs.commit(branch)
+        return branch
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot to host now; serialize + commit in the background."""
+        self.wait()  # one in flight at a time; surfaces prior errors
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                (branch,) = self.fs.create(name=self._branch_name(step,
+                                                                  "a"))
+                self._write_tree(branch, step, host_tree, extra)
+                self.fs.commit(branch)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._worker = threading.Thread(target=work, daemon=True)
+        self._worker.start()
+
+    def wait(self) -> None:
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        try:
+            return int(self.fs.read(BASE, "__latest__").decode())
+        except KeyError:
+            return None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                branch: str = BASE) -> Any:
+        """Rebuild a pytree shaped like ``like`` from a checkpoint."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError("no checkpoint committed")
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, _ in flat[0]:
+            key = f"step{step:012d}/{jax.tree_util.keystr(path)}"
+            leaves.append(leaf_from_bytes(self.fs.read(branch, key)))
+        return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    def restore_meta(self, step: Optional[int] = None,
+                     branch: str = BASE) -> Dict[str, Any]:
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        raw = self.fs.read(branch, f"step{step:012d}/__meta__")
+        return json.loads(raw.decode())
+
+    def steps(self) -> List[int]:
+        self.wait()
+        out = set()
+        for p in self.fs.listdir(BASE):
+            if p.startswith("step") and p.endswith("/__meta__"):
+                out.add(int(p[4:16]))
+        return sorted(out)

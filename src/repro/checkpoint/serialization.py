@@ -1,0 +1,78 @@
+"""Pytree leaf <-> bytes with a tiny self-describing header.
+
+Format: ``REPR0 | dtype-str-len | dtype-str | ndim | dims... | raw``;
+optional zstd compression (magic flips to ``REPRZ``).  bfloat16 is
+round-tripped through its uint16 bit pattern so numpy can carry it.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import zstandard as _zstd
+
+    _ZC = _zstd.ZstdCompressor(level=3)
+    _ZD = _zstd.ZstdDecompressor()
+except Exception:  # pragma: no cover
+    _zstd = None
+
+_MAGIC_RAW = b"REPR0"
+_MAGIC_ZST = b"REPRZ"
+
+
+def _np_view(x: Any) -> Tuple[np.ndarray, str]:
+    """numpy view + logical dtype string (handles bfloat16)."""
+    arr = np.asarray(x)
+    dt = str(arr.dtype)
+    if dt == "bfloat16":
+        arr = arr.view(np.uint16)
+    return arr, dt
+
+
+def leaf_to_bytes(x: Any, compress: bool = False) -> bytes:
+    arr, dt = _np_view(x)
+    raw = np.ascontiguousarray(arr).tobytes()
+    if compress and _zstd is not None:
+        raw = _ZC.compress(raw)
+        magic = _MAGIC_ZST
+    else:
+        magic = _MAGIC_RAW
+    dtb = dt.encode()
+    head = magic + struct.pack("<H", len(dtb)) + dtb
+    head += struct.pack("<H", arr.ndim)
+    head += struct.pack(f"<{arr.ndim}q", *arr.shape)
+    return head + raw
+
+
+def leaf_from_bytes(data: bytes) -> np.ndarray:
+    magic, off = data[:5], 5
+    (dtl,) = struct.unpack_from("<H", data, off)
+    off += 2
+    dt = data[off:off + dtl].decode()
+    off += dtl
+    (ndim,) = struct.unpack_from("<H", data, off)
+    off += 2
+    shape = struct.unpack_from(f"<{ndim}q", data, off)
+    off += 8 * ndim
+    raw = data[off:]
+    if magic == _MAGIC_ZST:
+        if _zstd is None:  # pragma: no cover
+            raise RuntimeError("zstd-compressed checkpoint, zstd missing")
+        raw = _ZD.decompress(raw)
+    elif magic != _MAGIC_RAW:
+        raise ValueError("bad leaf header")
+    if dt == "bfloat16":
+        arr = np.frombuffer(raw, np.uint16).reshape(shape)
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return np.frombuffer(raw, dt).reshape(shape).copy()
+
+
+def tree_paths(tree: Any) -> List[str]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in flat]

@@ -1,0 +1,91 @@
+"""Assigned input-shape presets + ShapeDtypeStruct ``input_specs``.
+
+The four LM shapes from the assignment.  ``decode_*`` / ``long_*`` lower
+``serve_step`` (one new token against a KV cache of ``seq_len``), NOT
+``train_step``.  ``long_500k`` requires sub-quadratic attention and is
+only applicable to SSM/hybrid archs (skips recorded by
+:func:`cell_applicable`).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Is (arch × shape) a runnable cell?  Returns (ok, reason_if_not).
+
+    Rules from the assignment:
+    * ``long_500k`` needs sub-quadratic attention → run only for
+      SSM/hybrid archs; skip for pure full-attention archs.
+    * decode shapes are skipped for encoder-only archs (none assigned).
+    """
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            f"{cfg.name} is pure full-attention; long_500k requires "
+            "sub-quadratic attention (SSM/hybrid only) — skip per assignment"
+        )
+    return True, ""
+
+
+def _token_spec(cfg: ArchConfig, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    if cfg.num_codebooks > 1:
+        return jax.ShapeDtypeStruct((batch, seq, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation — fed to
+    ``jax.jit(step).lower(**input_specs(...))`` by the dry-run.
+    """
+    from repro.models.model import decode_state_specs  # lazy: avoid cycle
+
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {
+            "tokens": _token_spec(cfg, b, s),
+            "targets": _token_spec(cfg, b, s),
+        }
+        if cfg.frontend == "vlm_stub":
+            specs["frontend_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), dt
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _token_spec(cfg, b, s)}
+        if cfg.frontend == "vlm_stub":
+            specs["frontend_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.d_model), dt
+            )
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {
+        "tokens": _token_spec(cfg, b, 1),
+        "cache": decode_state_specs(cfg, batch=b, max_len=s),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }

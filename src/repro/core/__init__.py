@@ -1,0 +1,56 @@
+"""Branch contexts — the paper's primary contribution, realized for JAX.
+
+Public API:
+
+* :class:`BranchStore` / :class:`BranchContext` — leaf-granular CoW branch
+  contexts over pytrees (host state domain, ≈ BranchFS).
+* :class:`KVBranchManager` — CoW paged KV / recurrent-state branching
+  (device state domain, ≈ BR_MEMORY).
+* :class:`BranchRuntime` — the ``branch()`` analogue: atomic multi-domain
+  fork/commit/abort with first-commit-wins.
+* :mod:`repro.core.explore` — in-program N-way exploration with
+  first-commit-wins collectives.
+"""
+
+from repro.core.branch import BranchContext, root_context
+from repro.core.errors import (
+    BranchError,
+    BranchStateError,
+    FrozenOriginError,
+    NoSuchLeafError,
+    StaleBranchError,
+)
+from repro.core.explore import (
+    ExploreResult,
+    explore,
+    first_commit_wins,
+    fork_stacked,
+    perturbed_fork,
+    select_branch,
+)
+from repro.core.kvbranch import AppendSlot, CowOp, KVBranchManager, SeqStatus
+from repro.core.runtime_api import (
+    BR_ABORT,
+    BR_CLOSE_FDS,
+    BR_COMMIT,
+    BR_CREATE,
+    BR_ISOLATE,
+    BR_KV,
+    BR_STATE,
+    BranchHandle,
+    BranchRuntime,
+)
+from repro.core.store import TOMBSTONE, BranchStatus, BranchStore
+from repro.core.store import explore as explore_threads
+
+__all__ = [
+    "BranchContext", "root_context",
+    "BranchError", "BranchStateError", "FrozenOriginError",
+    "NoSuchLeafError", "StaleBranchError",
+    "ExploreResult", "explore", "explore_threads", "first_commit_wins",
+    "fork_stacked", "perturbed_fork", "select_branch",
+    "AppendSlot", "CowOp", "KVBranchManager", "SeqStatus",
+    "BR_ABORT", "BR_CLOSE_FDS", "BR_COMMIT", "BR_CREATE", "BR_ISOLATE",
+    "BR_KV", "BR_STATE", "BranchHandle", "BranchRuntime",
+    "TOMBSTONE", "BranchStatus", "BranchStore",
+]

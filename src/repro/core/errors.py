@@ -1,0 +1,39 @@
+"""Branch-context error types.
+
+Mirrors the errno vocabulary of the paper's ``branch()`` syscall:
+``StaleBranchError`` is the ``-ESTALE`` a losing sibling receives after a
+first-commit-wins race; ``FrozenOriginError`` is the parent's read-only
+(``-EAGAIN``) behaviour while branches exist.
+"""
+
+from __future__ import annotations
+
+
+class BranchError(RuntimeError):
+    """Base class for all branch-context errors."""
+
+
+class StaleBranchError(BranchError):
+    """Raised when operating on a branch invalidated by a sibling's commit.
+
+    The OS analogue is ``-ESTALE`` returned from ``branch(BR_COMMIT)`` to
+    every loser of the exclusive commit group, and ``SIGBUS`` delivered to
+    mappings of an invalidated branch.
+    """
+
+
+class FrozenOriginError(BranchError):
+    """Raised when writing to a parent that has live child branches.
+
+    The paper freezes the origin while branches exist (filesystem writes
+    denied, memory pages read-only returning ``-EAGAIN``); this eliminates
+    merge conflicts by construction.
+    """
+
+
+class BranchStateError(BranchError):
+    """Raised on lifecycle misuse (double commit, op on aborted branch...)."""
+
+
+class NoSuchLeafError(BranchError, KeyError):
+    """Raised when chain resolution finds no leaf and no tombstone hides one."""

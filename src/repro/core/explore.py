@@ -1,0 +1,139 @@
+"""Device-side agentic exploration — fork/explore/commit inside one SPMD program.
+
+On a TPU there is no process to signal: sibling branches live in a stacked
+leading axis of the state pytree (optionally sharded over a mesh axis) and
+first-commit-wins is a reduction.  This module provides the pure-JAX
+primitives used by ``runtime/`` for speculative training, straggler
+mitigation, and beam-style serving exploration:
+
+* :func:`fork_stacked` — O(1)-per-branch broadcast fork (frozen origin is
+  structural: the origin pytree is never written, JAX arrays are
+  immutable).
+* :func:`first_commit_wins` — deterministic winner selection.  "First" is
+  the earliest ``commit_time`` among successful branches; in a
+  synchronous SPMD step every branch finishes together, so ties break to
+  the lowest branch index — the same total order the kernel's exclusive
+  commit group imposes.
+* :func:`select_branch` — the commit: gather the winner's leaves; sibling
+  buffers are simply never read again (donation reclaims them), the
+  SIGBUS/-ESTALE analogue.
+* :func:`explore` — one fork/explore/commit round under ``vmap``.
+
+Everything here is jit/pjit-compatible and used under ``shard_map`` with
+the branch axis mapped onto a mesh axis for multi-slice exploration.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fork_stacked(state: Any, n: int) -> Any:
+    """Fork ``n`` sibling copies of ``state`` along a new leading axis.
+
+    Uses ``broadcast_to`` so no HBM copy happens until a branch writes
+    (XLA materializes on first mutation) — the CoW analogue.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + jnp.shape(x)), state
+    )
+
+
+def perturbed_fork(
+    state: Any,
+    n: int,
+    perturb_fn: Callable[[Any, jax.Array, jax.Array], Any],
+    key: jax.Array,
+) -> Any:
+    """Fork ``n`` branches, each perturbed by ``perturb_fn(state, key_i, i)``.
+
+    This is the "explore" setup for speculative training: each branch gets
+    an independent RNG stream and its branch index (e.g. to scale a
+    hyperparameter).
+    """
+    keys = jax.random.split(key, n)
+    idx = jnp.arange(n)
+    return jax.vmap(lambda k, i: perturb_fn(state, k, i))(keys, idx)
+
+
+def first_commit_wins(
+    success: jax.Array,
+    commit_time: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Resolve the exclusive commit group.
+
+    Args:
+      success: bool[N] — which branches attempt a commit.
+      commit_time: optional float/int[N] — arrival order of the commit
+        attempts; earliest successful one wins.  Defaults to branch index
+        (synchronous step ⇒ index order is arrival order).
+
+    Returns:
+      (winner_index: int32 scalar, any_success: bool scalar).  If no
+      branch succeeds, ``winner_index`` is 0 and ``any_success`` is False
+      (caller keeps the frozen origin — "if all branches abort, the
+      parent resumes").
+    """
+    n = success.shape[0]
+    if commit_time is None:
+        commit_time = jnp.arange(n, dtype=jnp.float32)
+    commit_time = commit_time.astype(jnp.float32)
+    big = jnp.finfo(jnp.float32).max
+    keyed = jnp.where(success, commit_time, big)
+    winner = jnp.argmin(keyed).astype(jnp.int32)
+    return winner, jnp.any(success)
+
+
+def select_branch(stacked: Any, index: jax.Array) -> Any:
+    """Commit: extract branch ``index`` from every stacked leaf."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, index, axis=0, keepdims=False),
+        stacked,
+    )
+
+
+class ExploreResult(NamedTuple):
+    state: Any           # committed state (origin if nothing succeeded)
+    winner: jax.Array    # int32 — winning branch index
+    committed: jax.Array # bool — did any branch commit?
+    aux: Any             # stacked per-branch auxiliary outputs
+
+
+def explore(
+    step_fn: Callable[[Any, jax.Array], Tuple[Any, jax.Array, Any]],
+    origin: Any,
+    n: int,
+    key: jax.Array,
+    *,
+    perturb_fn: Optional[Callable[[Any, jax.Array, jax.Array], Any]] = None,
+    commit_time_fn: Optional[Callable[[Any], jax.Array]] = None,
+) -> ExploreResult:
+    """One fork/explore/commit round, fully inside jit.
+
+    ``step_fn(branch_state, key) -> (new_state, success, aux)`` runs in
+    parallel over ``n`` branches via ``vmap``.  The first successful
+    branch (per :func:`first_commit_wins`) commits; if none succeeds the
+    frozen origin is returned unchanged.
+    """
+    if perturb_fn is not None:
+        branches = perturbed_fork(origin, n, perturb_fn, key)
+    else:
+        branches = fork_stacked(origin, n)
+    keys = jax.random.split(jax.random.fold_in(key, 1), n)
+    new_states, success, aux = jax.vmap(step_fn)(branches, keys)
+    success = success.reshape((n,)).astype(bool)
+    commit_time = commit_time_fn(aux) if commit_time_fn is not None else None
+    winner, any_success = first_commit_wins(success, commit_time)
+    winner_state = select_branch(new_states, winner)
+    committed = jax.tree_util.tree_map(
+        lambda w, o: jnp.where(
+            jnp.asarray(any_success).reshape((1,) * jnp.ndim(w)), w, o
+        ),
+        winner_state,
+        origin,
+    )
+    return ExploreResult(state=committed, winner=winner,
+                         committed=any_success, aux=aux)

@@ -1,0 +1,330 @@
+"""Branched paged KV caches — BR_MEMORY for the accelerator.
+
+The paper's ``BR_MEMORY`` flag branches process memory via page-table
+copy-on-write.  The accelerator-resident mutable state of an LLM agent is
+its **KV cache** (attention archs) or **recurrent state** (SSM archs), and
+the TPU-native analogue of page-table CoW is a **block table** over fixed-
+size KV pages in HBM:
+
+* pages are the CoW quantum (file ↔ page);
+* a fork copies only the block table (O(pages_in_table) ints, no HBM
+  traffic) and bumps per-page refcounts — creation cost is independent of
+  context length *content* (paper Table 4's O(1)-in-base-size claim,
+  measured in ``benchmarks/kvbranch_bench.py``);
+* a write to a shared page (appending a token to the tail page) triggers
+  CoW: allocate a fresh page, copy one page of KV, update the table;
+* commit promotes the child's table to the parent and invalidates
+  siblings (their pages are decref'd and recycled) — first-commit-wins;
+* nesting falls out of fork-of-fork.
+
+Host metadata (tables, refcounts, free list) lives here; the page buffers
+themselves are device arrays owned by the serving engine and mutated
+functionally (``jax.Array.at``) or by the Pallas paged-attention kernel.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.errors import (
+    BranchStateError,
+    FrozenOriginError,
+    StaleBranchError,
+)
+
+
+class SeqStatus(Enum):
+    ACTIVE = "active"
+    FROZEN = "frozen"      # has live children (frozen origin)
+    COMMITTED = "committed"
+    ABORTED = "aborted"
+    STALE = "stale"
+
+
+@dataclass
+class _Seq:
+    seq_id: int
+    block_table: List[int]
+    length: int
+    parent: Optional[int] = None
+    children: List[int] = field(default_factory=list)
+    status: SeqStatus = SeqStatus.ACTIVE
+    parent_epoch_at_fork: int = 0
+    epoch: int = 0
+
+
+@dataclass(frozen=True)
+class CowOp:
+    """A device-side page copy the caller must perform before appending."""
+
+    src_page: int
+    dst_page: int
+
+
+@dataclass(frozen=True)
+class AppendSlot:
+    """Where the next token's KV goes for one sequence."""
+
+    page: int
+    offset: int
+    cow: Tuple[CowOp, ...] = ()
+
+
+class KVBranchManager:
+    """Block tables + refcounts + branch lifecycle for paged KV caches."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._refcount = np.zeros((num_pages,), dtype=np.int32)
+        self._seqs: Dict[int, _Seq] = {}
+        self._ids = itertools.count(0)
+
+    # ------------------------------------------------------------------
+    # page accounting
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return int(self._refcount[page])
+
+    def _alloc_page(self) -> int:
+        if not self._free:
+            raise MemoryError("KV page pool exhausted (-ENOSPC analogue)")
+        page = self._free.pop()
+        self._refcount[page] = 1
+        return page
+
+    def _incref(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self._refcount[p] += 1
+
+    def _decref(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self._refcount[p] -= 1
+            if self._refcount[p] == 0:
+                self._free.append(p)
+            assert self._refcount[p] >= 0, f"page {p} refcount underflow"
+
+    # ------------------------------------------------------------------
+    # sequence lifecycle
+    # ------------------------------------------------------------------
+    def _seq(self, seq_id: int) -> _Seq:
+        try:
+            return self._seqs[seq_id]
+        except KeyError:
+            raise BranchStateError(f"unknown sequence {seq_id}") from None
+
+    def _check_live(self, seq: _Seq) -> None:
+        if seq.status is SeqStatus.STALE:
+            raise StaleBranchError(f"sequence {seq.seq_id} is stale (-ESTALE)")
+        if seq.status in (SeqStatus.COMMITTED, SeqStatus.ABORTED):
+            raise BranchStateError(
+                f"sequence {seq.seq_id} is {seq.status.value}"
+            )
+        if seq.parent is not None:
+            parent = self._seqs[seq.parent]
+            if parent.epoch != seq.parent_epoch_at_fork:
+                seq.status = SeqStatus.STALE
+                raise StaleBranchError(
+                    f"sequence {seq.seq_id} is stale (-ESTALE)"
+                )
+
+    def is_live(self, seq_id: int) -> bool:
+        seq = self._seqs.get(seq_id)
+        if seq is None:
+            return False
+        try:
+            self._check_live(seq)
+        except (StaleBranchError, BranchStateError):
+            return False
+        return True
+
+    def new_seq(self, length: int = 0) -> int:
+        """Create a root sequence with enough pages for ``length`` tokens."""
+        n_pages = -(-max(length, 0) // self.page_size)
+        table = [self._alloc_page() for _ in range(n_pages)]
+        sid = next(self._ids)
+        self._seqs[sid] = _Seq(seq_id=sid, block_table=table, length=length)
+        return sid
+
+    def length(self, seq_id: int) -> int:
+        return self._seq(seq_id).length
+
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self._seq(seq_id).block_table)
+
+    # ------------------------------------------------------------------
+    # fork / append(CoW) / commit / abort
+    # ------------------------------------------------------------------
+    def fork(self, seq_id: int, n: int = 1) -> List[int]:
+        """Fork ``n`` children sharing every page of the parent.
+
+        O(table length) integer work, zero HBM traffic; the parent becomes
+        a frozen origin until all children resolve.
+        """
+        parent = self._seq(seq_id)
+        self._check_live(parent)
+        out: List[int] = []
+        for _ in range(n):
+            self._incref(parent.block_table)
+            cid = next(self._ids)
+            self._seqs[cid] = _Seq(
+                seq_id=cid,
+                block_table=list(parent.block_table),
+                length=parent.length,
+                parent=seq_id,
+                parent_epoch_at_fork=parent.epoch,
+            )
+            parent.children.append(cid)
+            out.append(cid)
+        parent.status = SeqStatus.FROZEN
+        return out
+
+    def prepare_append(self, seq_id: int, n_tokens: int = 1) -> List[AppendSlot]:
+        """Reserve slots for the next ``n_tokens`` tokens of ``seq_id``.
+
+        Returns one :class:`AppendSlot` per token; any CoW page copies the
+        device must perform are attached to the slot that triggers them.
+        The block table and length are updated eagerly (metadata is the
+        source of truth; device writes follow).
+        """
+        seq = self._seq(seq_id)
+        self._check_live(seq)
+        if seq.status is SeqStatus.FROZEN:
+            raise FrozenOriginError(
+                f"sequence {seq_id} has live children and is frozen"
+            )
+        slots: List[AppendSlot] = []
+        for _ in range(n_tokens):
+            offset = seq.length % self.page_size
+            cow: Tuple[CowOp, ...] = ()
+            if offset == 0:
+                # new page needed
+                page = self._alloc_page()
+                seq.block_table.append(page)
+            else:
+                page = seq.block_table[-1]
+                if self._refcount[page] > 1:
+                    # shared tail page: copy-on-write
+                    new_page = self._alloc_page()
+                    cow = (CowOp(src_page=page, dst_page=new_page),)
+                    self._decref([page])
+                    seq.block_table[-1] = new_page
+                    page = new_page
+            seq.length += 1
+            slots.append(AppendSlot(page=page, offset=offset, cow=cow))
+        return slots
+
+    def commit(self, seq_id: int) -> int:
+        """First-commit-wins: promote this child's table into the parent.
+
+        Siblings turn STALE and their page references are recycled.
+        Returns the parent sequence id (which resumes ACTIVE with the
+        child's content, PID-takeover style).
+        """
+        seq = self._seq(seq_id)
+        self._check_live(seq)
+        if seq.children and any(
+            self._seqs[c].status in (SeqStatus.ACTIVE, SeqStatus.FROZEN)
+            for c in seq.children
+        ):
+            raise BranchStateError(
+                f"sequence {seq_id} has live children; resolve them first"
+            )
+        if seq.parent is None:
+            raise BranchStateError("root sequence cannot commit")
+        parent = self._seqs[seq.parent]
+        # 1. win the race (epoch CAS under the GIL-protected metadata)
+        parent.epoch += 1
+        # 2. parent adopts the child's table (transfer the child's refs)
+        self._decref(parent.block_table)
+        parent.block_table = list(seq.block_table)
+        parent.length = seq.length
+        seq.status = SeqStatus.COMMITTED
+        # 3. invalidate siblings, recycle their pages
+        for cid in parent.children:
+            sib = self._seqs[cid]
+            if cid != seq_id and sib.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN):
+                self._invalidate(sib)
+        parent.children = []
+        parent.status = SeqStatus.ACTIVE
+        return parent.seq_id
+
+    def abort(self, seq_id: int) -> None:
+        """Discard the branch; siblings stay valid; parent may resume."""
+        seq = self._seq(seq_id)
+        if seq.status is SeqStatus.STALE:
+            return  # already recycled by the winner's commit
+        if seq.status in (SeqStatus.COMMITTED, SeqStatus.ABORTED):
+            raise BranchStateError(f"sequence {seq_id} is {seq.status.value}")
+        self._invalidate(seq, status=SeqStatus.ABORTED)
+        if seq.parent is not None:
+            parent = self._seqs[seq.parent]
+            if parent.status is SeqStatus.FROZEN and not any(
+                self._seqs[c].status in (SeqStatus.ACTIVE, SeqStatus.FROZEN)
+                for c in parent.children
+            ):
+                # all children resolved -> the parent resumes (paper §5.2:
+                # "if all branches abort, the parent resumes")
+                parent.status = SeqStatus.ACTIVE
+                parent.children = []
+
+    def _invalidate(self, seq: _Seq, status: SeqStatus = SeqStatus.STALE) -> None:
+        for cid in seq.children:
+            child = self._seqs[cid]
+            if child.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN):
+                self._invalidate(child)
+        self._decref(seq.block_table)
+        seq.block_table = []
+        seq.status = status
+
+    def release(self, seq_id: int) -> None:
+        """Free a root/active sequence outright (serving-slot eviction)."""
+        seq = self._seq(seq_id)
+        if seq.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN):
+            self._invalidate(seq, status=SeqStatus.ABORTED)
+
+    # ------------------------------------------------------------------
+    # dense views for the device step
+    # ------------------------------------------------------------------
+    def dense_block_tables(
+        self, seq_ids: Sequence[int], max_pages: int
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pack block tables into ``[batch, max_pages]`` (pad = 0) plus
+        lengths ``[batch]`` for the paged-attention kernel."""
+        bt = np.zeros((len(seq_ids), max_pages), dtype=np.int32)
+        lens = np.zeros((len(seq_ids),), dtype=np.int32)
+        for i, sid in enumerate(seq_ids):
+            seq = self._seq(sid)
+            table = seq.block_table
+            if len(table) > max_pages:
+                raise ValueError(
+                    f"sequence {sid} needs {len(table)} pages > {max_pages}"
+                )
+            bt[i, : len(table)] = table
+            lens[i] = seq.length
+        return bt, lens
+
+    def stats(self) -> Dict[str, int]:
+        live = sum(
+            1
+            for s in self._seqs.values()
+            if s.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN)
+        )
+        return {
+            "sequences_live": live,
+            "pages_total": self.num_pages,
+            "pages_free": len(self._free),
+            "pages_shared": int((self._refcount > 1).sum()),
+        }

@@ -1,0 +1,170 @@
+"""``branch()`` analogue — atomic composition of multi-domain branch forks.
+
+The paper's central argument for a syscall (§5, Table 3) is *atomic
+composition*: forking filesystem state, process groups, and memory in one
+call, with kernel-side cleanup on partial failure.  In branchx the state
+domains are (a) the host pytree store (≈ BR_FS), (b) device-resident
+paged-KV / recurrent state (≈ BR_MEMORY), and (c) executor slots in the
+serving/training engine (≈ the process group).  ``BranchRuntime.create``
+forks all requested domains or none — any failure unwinds the domains
+already forked, mirroring the kernel's cleanup-on-failure guarantee.
+
+Flags mirror Listing 1:
+
+* ``BR_STATE``  (paper BR_FS, required) — fork the pytree store.
+* ``BR_KV``     (paper BR_MEMORY)       — fork device generation state.
+* ``BR_ISOLATE``                        — enforce that a context cannot
+  address a sibling's handles (checked at the API boundary; inside one
+  SPMD program isolation is structural).
+* ``BR_CLOSE_FDS``                      — drop inherited open handles
+  (the context re-opens leaves through its own chain).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.branch import BranchContext
+from repro.core.errors import BranchError, BranchStateError, StaleBranchError
+from repro.core.store import BranchStore
+
+# operation codes (paper Listing 1)
+BR_CREATE = 0
+BR_COMMIT = 1
+BR_ABORT = 2
+
+# flags for BR_CREATE
+BR_STATE = 1 << 0   # paper: BR_FS (required)
+BR_KV = 1 << 1      # paper: BR_MEMORY
+BR_ISOLATE = 1 << 2
+BR_CLOSE_FDS = 1 << 3
+
+
+@dataclass
+class BranchHandle:
+    """What a child receives from ``create``: its view of every domain."""
+
+    index: int                       # 1..N, the paper's branch index
+    state: Optional[BranchContext]   # BR_STATE domain
+    kv_seqs: Dict[int, int] = field(default_factory=dict)  # parent seq -> forked seq
+    group: Sequence["BranchHandle"] = ()
+    flags: int = BR_STATE
+    _resolved: bool = False
+
+    def _sibling_guard(self, other: "BranchHandle") -> None:
+        if self.flags & BR_ISOLATE and other is not self:
+            raise BranchError(
+                "BR_ISOLATE: sibling branch handles are not addressable"
+            )
+
+
+class BranchRuntime:
+    """Composes branch forks across state domains atomically."""
+
+    def __init__(self, store: BranchStore,
+                 kv_manager: Optional[Any] = None):
+        self.store = store
+        self.kv = kv_manager  # duck-typed: fork(seq, n), commit(seq), abort(seq)
+
+    # ------------------------------------------------------------------
+    def create(
+        self,
+        parent: BranchContext,
+        n_branches: int,
+        flags: int = BR_STATE,
+        kv_seqs: Sequence[int] = (),
+    ) -> List[BranchHandle]:
+        """BR_CREATE: fork ``n_branches`` contexts across all domains.
+
+        Atomic: on any failure every domain already forked is unwound, so
+        the caller never observes a half-created branch set.
+        """
+        if not flags & BR_STATE:
+            raise ValueError("BR_STATE is required (paper: BR_FS required)")
+        if n_branches < 1:
+            raise ValueError("n_branches must be >= 1")
+
+        done: List[Callable[[], None]] = []
+        try:
+            state_ctxs = parent.fork(n_branches)
+            done.append(lambda: [c.abort() for c in state_ctxs if c.is_active])
+
+            kv_maps: List[Dict[int, int]] = [dict() for _ in range(n_branches)]
+            if flags & BR_KV:
+                if self.kv is None:
+                    raise BranchStateError("BR_KV requested but no kv manager")
+                for seq in kv_seqs:
+                    children = self.kv.fork(seq, n_branches)
+                    for i, child_seq in enumerate(children):
+                        kv_maps[i][seq] = child_seq
+                    done.append(
+                        lambda cs=children: [self.kv.abort(c) for c in cs
+                                             if self.kv.is_live(c)]
+                    )
+
+            handles = [
+                BranchHandle(index=i + 1, state=state_ctxs[i],
+                             kv_seqs=kv_maps[i], flags=flags)
+                for i in range(n_branches)
+            ]
+            for h in handles:
+                h.group = tuple(handles)
+            return handles
+        except Exception:
+            # kernel-side cleanup on failure: unwind in reverse order
+            for undo in reversed(done):
+                try:
+                    undo()
+                except Exception:  # pragma: no cover - best-effort unwind
+                    pass
+            raise
+
+    # ------------------------------------------------------------------
+    def commit(self, handle: BranchHandle) -> int:
+        """BR_COMMIT: win the exclusive-group race or raise StaleBranchError.
+
+        Order mirrors §5.2: the group race is decided first (by the state
+        store's epoch CAS under its lock), then filesystem-domain changes
+        apply, then KV/memory domain, then siblings are invalidated
+        (their next operation raises ``StaleBranchError`` = -ESTALE).
+        """
+        if handle._resolved:
+            raise BranchStateError("handle already resolved")
+        assert handle.state is not None
+        parent = handle.state.commit()  # first-commit-wins decided here
+        if handle.flags & BR_KV and self.kv is not None:
+            for parent_seq, child_seq in handle.kv_seqs.items():
+                self.kv.commit(child_seq)
+        handle._resolved = True
+        return parent
+
+    def abort(self, handle: BranchHandle) -> None:
+        """BR_ABORT: discard every domain's delta; siblings stay valid."""
+        if handle._resolved:
+            return
+        if handle.state is not None and handle.state.is_active:
+            handle.state.abort()
+        if handle.flags & BR_KV and self.kv is not None:
+            for child_seq in handle.kv_seqs.values():
+                if self.kv.is_live(child_seq):
+                    self.kv.abort(child_seq)
+        handle._resolved = True
+
+    # ------------------------------------------------------------------
+    def __call__(self, op: int, **kwargs: Any) -> Any:
+        """Multiplexed entry point in the style of ``bpf(2)`` / Listing 1."""
+        if op == BR_CREATE:
+            return self.create(**kwargs)
+        if op == BR_COMMIT:
+            return self.commit(**kwargs)
+        if op == BR_ABORT:
+            return self.abort(**kwargs)
+        raise ValueError(f"unknown branch() op {op}")
+
+
+__all__ = [
+    "BR_CREATE", "BR_COMMIT", "BR_ABORT",
+    "BR_STATE", "BR_KV", "BR_ISOLATE", "BR_CLOSE_FDS",
+    "BranchHandle", "BranchRuntime", "StaleBranchError",
+]

@@ -1,0 +1,438 @@
+"""BranchStore — leaf-granular copy-on-write branch contexts over pytrees.
+
+This is the in-memory realization of the paper's BranchFS semantics, with
+pytree *leaves* playing the role of files:
+
+* **CoW delta layers**: each branch holds only the leaves it wrote
+  (``delta`` dict).  Because JAX arrays are immutable, "copy"-on-write is
+  zero-copy: the delta stores a reference to the new array; the base is
+  never touched.  Branch creation is O(1) regardless of base size
+  (paper Table 4).
+* **Branch-chain resolution**: a read walks current branch → ancestors →
+  base, exactly the lookup order of BranchFS §4.2.
+* **Tombstones**: deletions write a sentinel so deleted leaves do not
+  "reappear" from the base.
+* **Frozen origin**: a branch with live children rejects writes
+  (`FrozenOriginError`).
+* **First-commit-wins**: commits race on the parent's epoch; the first
+  commit merges its delta into the parent and bumps the parent epoch,
+  which invalidates all siblings (`StaleBranchError`, the ``-ESTALE``
+  analogue).
+* **Nesting**: branches fork sub-branches; commit applies to the
+  *immediate* parent only (paper §5.2 "Nested Branches").
+
+The store is thread-safe: concurrent explorer threads may race commits and
+the winner is decided under a single lock, mirroring the kernel's
+exclusive commit group.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+
+import jax
+
+from repro.core.errors import (
+    BranchStateError,
+    FrozenOriginError,
+    NoSuchLeafError,
+    StaleBranchError,
+)
+
+
+class _Tombstone:
+    """Sentinel recording a deletion in a delta layer (BranchFS §4.2)."""
+
+    _instance: Optional["_Tombstone"] = None
+
+    def __new__(cls) -> "_Tombstone":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "<TOMBSTONE>"
+
+
+TOMBSTONE = _Tombstone()
+
+
+class BranchStatus(Enum):
+    ACTIVE = "active"
+    COMMITTED = "committed"
+    ABORTED = "aborted"
+    STALE = "stale"  # invalidated by a sibling's commit (-ESTALE)
+
+
+@dataclass
+class _Node:
+    """One branch context: a delta layer + lifecycle bookkeeping."""
+
+    branch_id: int
+    parent: Optional[int]
+    delta: Dict[str, Any] = field(default_factory=dict)
+    status: BranchStatus = BranchStatus.ACTIVE
+    # Parent epoch observed at fork time.  A commit is valid only while the
+    # parent's epoch is unchanged; the winning commit bumps it, so every
+    # sibling's next commit/read attempt fails the epoch check (-ESTALE).
+    parent_epoch_at_fork: int = 0
+    epoch: int = 0  # bumped when *this* node accepts a child's commit
+    children: List[int] = field(default_factory=list)
+    group: Optional[int] = None  # exclusive commit group id (BR_CREATE set)
+    created_at: float = field(default_factory=time.monotonic)
+
+
+class BranchStore:
+    """A tree of CoW branch contexts over a flat ``{path: leaf}`` namespace.
+
+    The root (branch id 0) is the base "filesystem".  All other branches
+    are created by :meth:`fork` and resolved by :meth:`commit` /
+    :meth:`abort`.
+    """
+
+    ROOT = 0
+
+    def __init__(self, base: Optional[Mapping[str, Any]] = None):
+        self._lock = threading.RLock()
+        self._ids = itertools.count(1)
+        self._groups = itertools.count(1)
+        root = _Node(branch_id=self.ROOT, parent=None)
+        root.delta = dict(base or {})
+        self._nodes: Dict[int, _Node] = {self.ROOT: root}
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _node(self, branch_id: int) -> _Node:
+        try:
+            return self._nodes[branch_id]
+        except KeyError:
+            raise BranchStateError(f"unknown branch id {branch_id!r}") from None
+
+    def _check_live(self, node: _Node) -> None:
+        if node.status is BranchStatus.STALE:
+            raise StaleBranchError(
+                f"branch {node.branch_id} was invalidated by a sibling commit"
+            )
+        if node.status is not BranchStatus.ACTIVE:
+            raise BranchStateError(
+                f"branch {node.branch_id} is {node.status.value}, not active"
+            )
+        # Epoch check: if the parent epoch moved past what we forked from,
+        # a sibling committed and we are stale even if not yet marked.
+        if node.parent is not None:
+            parent = self._nodes[node.parent]
+            if parent.epoch != node.parent_epoch_at_fork:
+                node.status = BranchStatus.STALE
+                raise StaleBranchError(
+                    f"branch {node.branch_id} is stale "
+                    f"(parent epoch {parent.epoch} != "
+                    f"{node.parent_epoch_at_fork} at fork)"
+                )
+
+    def _chain(self, branch_id: int) -> Iterator[_Node]:
+        """Yield nodes from ``branch_id`` up to and including the root."""
+        cur: Optional[int] = branch_id
+        while cur is not None:
+            node = self._nodes[cur]
+            yield node
+            cur = node.parent
+
+    def _live_children(self, node: _Node) -> List[_Node]:
+        return [
+            self._nodes[c]
+            for c in node.children
+            if self._nodes[c].status is BranchStatus.ACTIVE
+        ]
+
+    # ------------------------------------------------------------------
+    # lifecycle: fork / commit / abort
+    # ------------------------------------------------------------------
+    def fork(self, parent: int = ROOT, n: int = 1) -> List[int]:
+        """Create ``n`` sibling branches from a frozen origin.  O(1) each.
+
+        All ``n`` branches form an *exclusive group*: at most one of them
+        can commit; the winner invalidates the rest (paper §5.2
+        BR_CREATE).
+        """
+        if n < 1:
+            raise ValueError("n must be >= 1")
+        with self._lock:
+            pnode = self._node(parent)
+            if pnode.status not in (BranchStatus.ACTIVE, BranchStatus.COMMITTED):
+                # committed interior nodes may still be forked from (their
+                # state is merged upward, but chain resolution still works)
+                self._check_live(pnode)
+            group = next(self._groups)
+            out: List[int] = []
+            for _ in range(n):
+                bid = next(self._ids)
+                node = _Node(
+                    branch_id=bid,
+                    parent=parent,
+                    parent_epoch_at_fork=pnode.epoch,
+                    group=group,
+                )
+                self._nodes[bid] = node
+                pnode.children.append(bid)
+                out.append(bid)
+            return out
+
+    def commit(self, branch_id: int) -> int:
+        """Atomically apply this branch's delta to its immediate parent.
+
+        First-commit-wins: under the store lock, the epoch check decides
+        the race.  On success the parent's epoch is bumped, turning every
+        sibling stale.  Returns the parent id (the branch "replaces" the
+        parent, analogous to the PID takeover of ``BR_COMMIT``).
+        """
+        with self._lock:
+            node = self._node(branch_id)
+            self._check_live(node)  # raises StaleBranchError if we lost
+            if self._live_children(node):
+                raise BranchStateError(
+                    f"branch {branch_id} has live children; commit or abort "
+                    "them first (commit applies to the immediate parent only)"
+                )
+            assert node.parent is not None, "root cannot commit"
+            parent = self._nodes[node.parent]
+            # Apply tombstones first, then modified leaves (BranchFS §4.3).
+            for path, leaf in node.delta.items():
+                if leaf is TOMBSTONE:
+                    if parent.parent is None:
+                        # committing into the base: delete outright
+                        parent.delta.pop(path, None)
+                    else:
+                        parent.delta[path] = TOMBSTONE
+            for path, leaf in node.delta.items():
+                if leaf is not TOMBSTONE:
+                    parent.delta[path] = leaf
+            node.status = BranchStatus.COMMITTED
+            node.delta = {}
+            parent.epoch += 1  # invalidates all siblings
+            for sid in parent.children:
+                sib = self._nodes[sid]
+                if sid != branch_id and sib.status is BranchStatus.ACTIVE:
+                    sib.status = BranchStatus.STALE
+                    self._invalidate_descendants(sib)
+            return parent.branch_id
+
+    def abort(self, branch_id: int) -> None:
+        """Discard the branch's delta; siblings remain valid.  O(1)."""
+        with self._lock:
+            node = self._node(branch_id)
+            if node.status is BranchStatus.STALE:
+                # aborting a stale branch is allowed (cleanup after -ESTALE)
+                node.delta = {}
+                return
+            if node.status is not BranchStatus.ACTIVE:
+                raise BranchStateError(
+                    f"branch {branch_id} is {node.status.value}"
+                )
+            node.status = BranchStatus.ABORTED
+            node.delta = {}
+            self._invalidate_descendants(node)
+
+    def _invalidate_descendants(self, node: _Node) -> None:
+        for cid in node.children:
+            child = self._nodes[cid]
+            if child.status is BranchStatus.ACTIVE:
+                child.status = BranchStatus.STALE
+            child.delta = {}
+            self._invalidate_descendants(child)
+
+    # ------------------------------------------------------------------
+    # namespace ops (the "filesystem" interface)
+    # ------------------------------------------------------------------
+    def read(self, branch_id: int, path: str) -> Any:
+        """Chain resolution: branch delta → ancestors → base (§4.2)."""
+        with self._lock:
+            node = self._node(branch_id)
+            if node.status is BranchStatus.ACTIVE:
+                self._check_live(node)
+            elif node.status is BranchStatus.STALE:
+                raise StaleBranchError(
+                    f"branch {branch_id} was invalidated (SIGBUS analogue)"
+                )
+            elif node.status is BranchStatus.ABORTED:
+                raise BranchStateError(f"branch {branch_id} was aborted")
+            for level in self._chain(branch_id):
+                if path in level.delta:
+                    leaf = level.delta[path]
+                    if leaf is TOMBSTONE:
+                        raise NoSuchLeafError(path)
+                    return leaf
+            raise NoSuchLeafError(path)
+
+    def exists(self, branch_id: int, path: str) -> bool:
+        try:
+            self.read(branch_id, path)
+            return True
+        except NoSuchLeafError:
+            return False
+
+    def write(self, branch_id: int, path: str, value: Any) -> None:
+        with self._lock:
+            node = self._node(branch_id)
+            self._check_live(node)
+            if self._live_children(node):
+                raise FrozenOriginError(
+                    f"branch {branch_id} has live children and is frozen"
+                )
+            node.delta[path] = value
+
+    def write_many(self, branch_id: int, items: Mapping[str, Any]) -> None:
+        with self._lock:
+            node = self._node(branch_id)
+            self._check_live(node)
+            if self._live_children(node):
+                raise FrozenOriginError(
+                    f"branch {branch_id} has live children and is frozen"
+                )
+            node.delta.update(items)
+
+    def delete(self, branch_id: int, path: str) -> None:
+        """Record a tombstone (the leaf must currently resolve)."""
+        with self._lock:
+            node = self._node(branch_id)
+            self._check_live(node)
+            if self._live_children(node):
+                raise FrozenOriginError(
+                    f"branch {branch_id} has live children and is frozen"
+                )
+            if not self.exists(branch_id, path):
+                raise NoSuchLeafError(path)
+            node.delta[path] = TOMBSTONE
+
+    def listdir(self, branch_id: int) -> List[str]:
+        """Effective namespace: union along the chain minus tombstones."""
+        with self._lock:
+            self._node(branch_id)
+            seen: Dict[str, bool] = {}
+            for level in self._chain(branch_id):
+                for path, leaf in level.delta.items():
+                    if path not in seen:
+                        seen[path] = leaf is not TOMBSTONE
+            return sorted(p for p, alive in seen.items() if alive)
+
+    def delta_size(self, branch_id: int) -> int:
+        return len(self._node(branch_id).delta)
+
+    def status(self, branch_id: int) -> BranchStatus:
+        with self._lock:
+            node = self._node(branch_id)
+            if node.status is BranchStatus.ACTIVE and node.parent is not None:
+                parent = self._nodes[node.parent]
+                if parent.epoch != node.parent_epoch_at_fork:
+                    node.status = BranchStatus.STALE
+            return node.status
+
+    def epoch(self, branch_id: int) -> int:
+        return self._node(branch_id).epoch
+
+    # ------------------------------------------------------------------
+    # pytree convenience layer
+    # ------------------------------------------------------------------
+    @staticmethod
+    def flatten_pytree(tree: Any, prefix: str = "") -> Dict[str, Any]:
+        """Flatten a pytree into ``{key-path: leaf}`` with stable names."""
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        out: Dict[str, Any] = {}
+        for path, leaf in flat:
+            key = prefix + jax.tree_util.keystr(path)
+            out[key] = leaf
+        return out
+
+    def snapshot_pytree(self, branch_id: int, tree: Any, prefix: str = "") -> None:
+        """Write every leaf of ``tree`` into the branch (O(leaves) refs)."""
+        self.write_many(branch_id, self.flatten_pytree(tree, prefix))
+
+    def restore_pytree(self, branch_id: int, treedef_tree: Any, prefix: str = "") -> Any:
+        """Rebuild a pytree shaped like ``treedef_tree`` from the branch."""
+        flat = jax.tree_util.tree_flatten_with_path(treedef_tree)
+        leaves = []
+        for path, _ in flat[0]:
+            key = prefix + jax.tree_util.keystr(path)
+            leaves.append(self.read(branch_id, key))
+        return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    # ------------------------------------------------------------------
+    # introspection for tests / benchmarks
+    # ------------------------------------------------------------------
+    def chain_depth(self, branch_id: int) -> int:
+        return sum(1 for _ in self._chain(branch_id)) - 1
+
+    def consolidated_view(self, branch_id: int) -> Dict[str, Any]:
+        """Materialize the flat effective namespace.
+
+        This is the analogue of BranchFS *passthrough* mode: pay the chain
+        walk once, then serve reads at native speed from the flat dict.
+        """
+        with self._lock:
+            out: Dict[str, Any] = {}
+            dead: set = set()
+            for level in self._chain(branch_id):
+                for path, leaf in level.delta.items():
+                    if path in out or path in dead:
+                        continue
+                    if leaf is TOMBSTONE:
+                        dead.add(path)
+                    else:
+                        out[path] = leaf
+            return out
+
+
+def explore(
+    store: BranchStore,
+    parent: int,
+    fns: List[Callable[[int], bool]],
+    *,
+    threads: bool = True,
+) -> Tuple[Optional[int], List[BranchStatus]]:
+    """Run one fork/explore/commit round: the paper's Listing 2 in Python.
+
+    Each ``fns[i]`` receives its branch id, does arbitrary reads/writes on
+    it, and returns truthy to *attempt a commit*.  The first successful
+    commit wins; every other branch ends STALE (if it lost the race) or
+    ABORTED (if it returned falsy).  Returns ``(winner_branch_id | None,
+    statuses)``.
+    """
+    branches = store.fork(parent, n=len(fns))
+    winner: List[Optional[int]] = [None]
+
+    def _run(i: int, bid: int) -> None:
+        try:
+            ok = fns[i](bid)
+        except StaleBranchError:
+            return
+        if ok:
+            try:
+                store.commit(bid)
+                winner[0] = bid
+            except StaleBranchError:
+                pass  # lost the race: -ESTALE
+        else:
+            try:
+                store.abort(bid)
+            except (StaleBranchError, BranchStateError):
+                pass
+
+    if threads:
+        ts = [
+            threading.Thread(target=_run, args=(i, bid))
+            for i, bid in enumerate(branches)
+        ]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    else:
+        for i, bid in enumerate(branches):
+            _run(i, bid)
+
+    return winner[0], [store.status(b) for b in branches]

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataState, SyntheticLMPipeline
+
+__all__ = ["DataState", "SyntheticLMPipeline"]

@@ -1,0 +1,15 @@
+"""Distribution substrate: mesh/axis conventions, sharding rules,
+custom collectives (compression, overlap)."""
+
+from repro.distributed.mesh import ParallelPlan, SINGLE_DEVICE
+from repro.distributed.sharding import (
+    batch_spec,
+    param_shardings,
+    shard_params,
+    state_shardings,
+)
+
+__all__ = [
+    "ParallelPlan", "SINGLE_DEVICE", "batch_spec", "param_shardings",
+    "shard_params", "state_shardings",
+]

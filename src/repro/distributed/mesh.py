@@ -1,0 +1,72 @@
+"""Mesh/axis conventions.
+
+Axis names:
+  ``pod``   — cross-pod data parallelism (multi-pod meshes only)
+  ``data``  — in-pod data parallelism + FSDP parameter sharding
+  ``model`` — tensor parallelism (heads / d_ff / experts / vocab)
+
+``ParallelPlan`` carries the mesh plus which axes exist, so model code can
+be written once and run single-device (tests), single-pod, or multi-pod.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+
+    @property
+    def is_distributed(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def dp(self) -> Optional[Tuple[str, ...]]:
+        return self.dp_axes if self.dp_axes else None
+
+    @property
+    def dp_size(self) -> int:
+        if not self.mesh:
+            return 1
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis] if (
+            self.mesh and self.tp_axis) else 1
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint when distributed, identity otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec))
+        )
+
+    def sharding(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+
+SINGLE_DEVICE = ParallelPlan()
+
+
+def plan_from_mesh(mesh: Mesh) -> ParallelPlan:
+    """Build the standard plan from a mesh's axis names."""
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    return ParallelPlan(mesh=mesh, dp_axes=dp, tp_axis=tp)

@@ -1,0 +1,12 @@
+"""BranchFS analogue on disk — branching delta checkpoints.
+
+``chunkstore`` is the content-addressed, refcounted byte store;
+``branchfs`` layers branch manifests (delta layers + tombstones + epochs)
+with commit-to-parent and sibling invalidation on top, all unprivileged
+and portable across underlying filesystems (R5).
+"""
+
+from repro.fs.branchfs import BranchFS
+from repro.fs.chunkstore import ChunkStore
+
+__all__ = ["BranchFS", "ChunkStore"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as a subpackage: ``kernel.py`` (pl.pallas_call +
+explicit BlockSpec VMEM tiling), ``ops.py`` (jit'd public wrapper with
+backend fallback), ``ref.py`` (pure-jnp oracle).  All validated in
+interpret mode against the oracles by ``tests/kernels/``.
+"""
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["flash_attention", "paged_attention", "ssd_scan"]

@@ -1,0 +1,50 @@
+"""Jit'd wrapper for flash attention with a custom VJP.
+
+Forward: Pallas kernel (TPU) / chunked-jnp fallback elsewhere.
+Backward: recompute-based VJP through the chunked-jnp implementation —
+the forward kernel is the perf-critical path (prefill), while training
+backward keeps XLA's fused recompute (remat makes this the same FLOPs a
+dedicated backward kernel would do, see DESIGN §7).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models.layers import chunked_causal_attention
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, impl):
+    if impl == "pallas":
+        return flash_attention_kernel(q, k, v)
+    if impl == "interpret":
+        return flash_attention_kernel(q, k, v, interpret=True)
+    return chunked_causal_attention(q, k, v)
+
+
+def _fwd(q, k, v, impl):
+    return _flash(q, k, v, impl), (q, k, v)
+
+
+def _bwd(impl, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: chunked_causal_attention(q_, k_, v_),
+                     q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, impl: str = "auto") -> jax.Array:
+    """Causal GQA attention.  q: [b,s,h,hd]; k,v: [b,s,kv,hd]."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "chunked"
+    return _flash(q, k, v, impl)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray
+                        ) -> jnp.ndarray:
+    """Full-materialization causal attention.
+
+    q: [b, s, h, hd]; k, v: [b, s, kv, hd]; returns [b, s, h, hd].
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: paged decode attention with block-table indirection.
+
+This is the paper's branch-chain resolution moved on-chip: a branched
+sequence's KV pages are scattered across the HBM page pool (shared CoW
+prefixes + private tail pages), and the block table — the flattened
+branch chain — drives which page each grid step streams into VMEM.
+
+TPU adaptation notes (vs. a GPU paged-attention port):
+* the block table rides in **scalar-prefetch SMEM** so the ``index_map``
+  can select the next HBM page *before* the grid step runs — Pallas
+  double-buffers the page loads, hiding the indirection latency that a
+  GPU kernel hides with warp-level gathers;
+* online-softmax accumulators persist in VMEM **scratch** across the
+  sequential page-walk grid dimension (TPU grids iterate, they don't
+  oversubscribe like SM blocks);
+* tiles are MXU-shaped: page_size is a multiple of 8 and head_dim a
+  multiple of 128 on real hardware (decode is HBM-bandwidth-bound, so
+  the matmul shape mostly matters for VREG packing).
+
+Grid: (batch, kv_heads, pages).  The page axis is innermost so the
+accumulators for one (seq, head) stay resident until finalized.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_BIG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(
+    # scalar prefetch
+    block_tables_ref,   # [b, max_pages] int32 (SMEM)
+    lengths_ref,        # [b] int32 (SMEM)
+    # inputs
+    q_ref,              # [1, 1, g, hd]
+    k_ref,              # [1, page, 1, hd]
+    v_ref,              # [1, page, 1, hd]
+    # outputs
+    o_ref,              # [1, 1, g, hd]
+    # scratch
+    m_ref,              # [g, 1] f32
+    l_ref,              # [g, 1] f32
+    acc_ref,            # [g, hd] f32
+    *,
+    page_size: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [g, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [page, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                        # [g, page]
+
+    pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (1, page_size), 1)
+    valid = pos < lengths_ref[b]                     # [1, page]
+    s = jnp.where(valid, s, NEG_BIG)
+
+    m_prev = m_ref[...]                              # [g, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)        # [g, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                  # [g, 1]
+    p = jnp.exp(s - m_new)                           # [g, page]
+    p = jnp.where(valid, p, 0.0)
+
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(
+    q: jax.Array,            # [b, kv, g, hd]
+    k_pages: jax.Array,      # [n_pages, page, kv, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array, # [b, max_pages] int32
+    lengths: jax.Array,      # [b] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kv, g, hd = q.shape
+    page = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (b, kv, max_pages)
+
+    def q_map(b_, h_, i_, bt, ln):
+        return (b_, h_, 0, 0)
+
+    def kv_map(b_, h_, i_, bt, ln):
+        return (bt[b_, i_], 0, h_, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), q_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+
+    kernel = pl.pallas_call(
+        functools.partial(_kernel, page_size=page, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), q.dtype),
+        interpret=interpret,
+    )
+    return kernel(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+                  q, k_pages, v_pages)

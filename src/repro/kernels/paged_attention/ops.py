@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for paged decode attention.
+
+Backend selection: the Pallas kernel on TPU, interpret-mode Pallas when
+requested (CPU validation), and the pure-jnp gather reference otherwise
+(CPU smoke/serving — same math, same roofline terms)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def paged_attention(
+    q: jax.Array,            # [b, kv, g, hd]
+    k_pages: jax.Array,      # [n_pages, page, kv, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array, # [b, max_pages] int32
+    lengths: jax.Array,      # [b] int32
+    *,
+    impl: str = "auto",
+) -> jax.Array:
+    """Decode attention over CoW KV pages.  Returns [b, kv, g, hd]."""
+    if impl == "auto":
+        impl = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if impl == "pallas":
+        return paged_attention_kernel(q, k_pages, v_pages, block_tables,
+                                      lengths)
+    if impl == "interpret":
+        return paged_attention_kernel(q, k_pages, v_pages, block_tables,
+                                      lengths, interpret=True)
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables,
+                                   lengths)
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged decode attention over branched KV pages."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # [b, kv, g, hd]
+    k_pages: jnp.ndarray,      # [n_pages, page, kv, hd]
+    v_pages: jnp.ndarray,      # [n_pages, page, kv, hd]
+    block_tables: jnp.ndarray, # [b, max_pages] int32 (pad = anything)
+    lengths: jnp.ndarray,      # [b] int32
+) -> jnp.ndarray:
+    """Gather pages densely, then masked softmax attention.
+
+    Returns [b, kv, g, hd].
+    """
+    b, kv, g, hd = q.shape
+    page = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    s = max_pages * page
+
+    # dense gather of each sequence's pages: [b, max_pages, page, kv, hd]
+    k = k_pages[block_tables].reshape(b, s, kv, hd)
+    v = v_pages[block_tables].reshape(b, s, kv, hd)
+
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]      # [b, s]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v.dtype), v)
+    return out

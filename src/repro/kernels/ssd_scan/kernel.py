@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+State-space duality on the MXU: for each (sequence, head) the kernel
+walks the chunk axis sequentially, computing the quadratic *intra-chunk*
+dual form as three small matmuls (``[Q,N]×[N,Q]``, ``[Q,Q]×[Q,P]``,
+``[N,Q]×[Q,P]``) and carrying the ``[N,P]`` recurrent state in fp32 VMEM
+scratch across grid steps — the inter-chunk recurrence never touches HBM.
+
+Tiling: chunk Q=128 rows (MXU-aligned), state N=64..128 and head dim
+P=64 ride the lane dimension.  dt/decay math is fp32; the matmul inputs
+are cast to the model dtype.
+
+Grid: (batch, heads, chunks) — chunks innermost so the state scratch for
+one (b, h) stays resident until the sequence is done.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,     # [1, 1, Q, P]
+    dt_ref,    # [1, 1, Q, 1]  (post-softplus, f32)
+    a_ref,     # [1, 1]        (A for this head, f32, negative)
+    b_ref,     # [1, 1, Q, N]
+    c_ref,     # [1, 1, Q, N]
+    y_ref,     # [1, 1, Q, P]  out
+    state_out_ref,  # [1, 1, N, P] out (final state)
+    state_ref,      # [N, P] f32 scratch
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0]                             # [Q, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)       # [Q, 1]
+    A = a_ref[0, 0]                                # scalar f32
+    Bm = b_ref[0, 0]                               # [Q, N]
+    Cm = c_ref[0, 0]                               # [Q, N]
+
+    dA = dt * A                                    # [Q, 1], negative
+    cum = jnp.cumsum(dA, axis=0)                   # [Q, 1]
+
+    # intra-chunk dual form
+    cb = jax.lax.dot_general(
+        Cm.astype(jnp.float32), Bm.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                              # [Q, Q]
+    decay = jnp.exp(cum - cum.T)                   # [Q, Q] (q row, k col)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(kpos <= qpos, decay, 0.0)
+    W = cb * L * dt.T                              # [Q, Q] f32
+    y = jax.lax.dot_general(
+        W.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # [Q, P]
+
+    # inter-chunk contribution from the carried state
+    y_off = jax.lax.dot_general(
+        Cm.astype(jnp.float32), state_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)                               # [Q, P]
+
+    y_ref[0, 0, 0] = (y + y_off).astype(y_ref.dtype)
+
+    # state update: S = exp(cum_Q) * S + (B * dt * decay_to_end)^T @ x
+    decay_end = jnp.exp(cum[-1:] - cum)            # [Q, 1]
+    wk = (Bm.astype(jnp.float32) * (dt * decay_end))  # [Q, N]
+    s_new = jax.lax.dot_general(
+        wk, x.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # [N, P]
+    state_ref[...] = jnp.exp(cum[-1]) * state_ref[...] + s_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_kernel(
+    x: jax.Array,    # [b, s, H, P]
+    dt: jax.Array,   # [b, s, H] f32 (post-softplus)
+    A: jax.Array,    # [H] f32 (negative)
+    B: jax.Array,    # [b, s, N]
+    C: jax.Array,    # [b, s, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # head-major chunked layouts
+    xt = x.transpose(0, 2, 1, 3).reshape(b, H, nc, chunk, P)
+    dtt = dt.astype(jnp.float32).transpose(0, 2, 1).reshape(b, H, nc,
+                                                            chunk, 1)
+    Bt = B.reshape(b, nc, chunk, N)
+    Ct = C.reshape(b, nc, chunk, N)
+    A2 = A.astype(jnp.float32).reshape(H, 1)
+
+    grid = (b, H, nc)
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, 1),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b_, h_, c_: (b_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b_, h_, c_: (b_, c_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P),
+                         lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, H, nc, chunk, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A2, Bt, Ct)
+
+    y = y.reshape(b, H, s, P).transpose(0, 2, 1, 3)
+    return y, state

@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the SSD scan: kernel on TPU, chunked-jnp elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128, impl: str = "auto",
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD scan.  Returns (y [b,s,H,P], final_state [b,H,N,P])."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return ssd_scan_kernel(x, dt, A, B, C, chunk=chunk)
+    if impl == "interpret":
+        return ssd_scan_kernel(x, dt, A, B, C, chunk=chunk, interpret=True)
+    if impl == "ref":
+        return ssd_scan_ref(x, dt, A, B, C, chunk)
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,19 @@
+"""Oracle for the SSD scan kernel: the model's chunked-jnp implementation
+(itself validated against one-token recurrence by the smoke tests)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int) -> Tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """x: [b,s,H,P]; dt: [b,s,H] (post-softplus); A: [H]; B,C: [b,s,N].
+
+    Returns (y [b,s,H,P], final_state [b,H,N,P]).
+    """
+    return ssd_chunked(x, dt, A, B, C, chunk)

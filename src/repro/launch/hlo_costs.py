@@ -1,0 +1,388 @@
+"""Trip-count-aware cost accounting over optimized (post-SPMD) HLO text.
+
+XLA's built-in ``cost_analysis()`` counts a ``while`` body ONCE, which
+under-counts scan-over-layers programs by a factor of L — useless for a
+roofline.  This parser builds a per-computation symbol table (operand
+shapes are not inlined in optimized HLO), then walks the call graph with
+multipliers:
+
+* ``while`` bodies multiply by ``backend_config known_trip_count``;
+* ``fusion``/``call``/``to_apply`` descend with multiplier 1 for FLOPs,
+  but contribute bytes only at the callsite (fusion internals never touch
+  HBM — the memory model a roofline wants);
+* FLOPs = 2·prod(output dims)·prod(contracted dims) per ``dot`` (matmuls
+  dominate; elementwise FLOPs are noise at roofline granularity);
+* bytes accessed = operand bytes + output bytes per top-level
+  instruction;
+* collective bytes = output-shape bytes of every all-gather / all-reduce
+  / reduce-scatter / all-to-all / collective-permute (-start variants
+  counted, -done skipped).
+
+All numbers are PER-DEVICE (the SPMD module is per-device); the roofline
+formulas multiply by chip count where needed.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+Shape = Tuple[str, Tuple[int, ...]]
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([0-9,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=")
+_OP_RE = re.compile(r"=\s*(.*?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?(\d+)"?')
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes_in(s: str) -> List[Shape]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = tuple(int(d) for d in m.group(2).split(",")) \
+            if m.group(2) else ()
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(shapes: List[Shape]) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    op: str
+    out_shapes: List[Shape]
+    operands: List[str]
+    attr_str: str
+    calls: List[str]
+    while_body: Optional[str] = None
+    trip_count: Optional[int] = None
+    vmem_tagged: bool = False  # would live in VMEM under the Pallas kernel
+
+
+@dataclass
+class _Computation:
+    name: str
+    symbols: Dict[str, List[Shape]] = field(default_factory=dict)
+    instrs: List[_Instr] = field(default_factory=list)
+    param_order: List[str] = field(default_factory=list)
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    core = line.split(" metadata=")[0]
+    dm = _DEF_RE.match(core)
+    if dm is None:
+        return None
+    name = dm.group(1)
+    m = _OP_RE.search(core)
+    if not m:
+        return None
+    out_str, op = m.group(1), m.group(2)
+    out_shapes = _shapes_in(out_str)
+    _, _, rhs = core.partition(f" {op}(")
+    depth, end = 0, len(rhs)
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    operand_str, attr_str = rhs[:end], rhs[end:]
+    operands = _OPERAND_RE.findall(operand_str)
+
+    inst = _Instr(name=name, op=op, out_shapes=out_shapes,
+                  operands=operands, attr_str=attr_str,
+                  calls=_CALLS_RE.findall(attr_str),
+                  vmem_tagged="vmem_resident" in line)
+    if op == "while":
+        bm = _BODY_RE.search(attr_str)
+        inst.while_body = bm.group(1) if bm else None
+        tm = _TRIP_RE.search(line)
+        if tm:
+            inst.trip_count = int(tm.group(1))
+    return inst
+
+
+def parse_hlo(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry = None
+    for line in text.splitlines():
+        head = _COMP_HEAD_RE.match(line)
+        if head:
+            cur = _Computation(name=head.group(2))
+            comps[cur.name] = cur
+            if head.group(1):
+                entry = cur.name
+            # header params: "name: shape, name: (tuple...)"
+            params_str = head.group(3)
+            for pm in _PARAM_RE.finditer(params_str):
+                pname = pm.group(1)
+                rest = params_str[pm.end():]
+                # shape text until the next ", name:" boundary
+                nxt = _PARAM_RE.search(rest)
+                shape_txt = rest[: nxt.start()] if nxt else rest
+                cur.symbols[pname] = _shapes_in(shape_txt)
+                cur.param_order.append(pname)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            inst = _parse_instr(line)
+            if inst is not None:
+                cur.instrs.append(inst)
+                cur.symbols[inst.name] = inst.out_shapes
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    bytes_vmem_tagged: float = 0.0  # traffic the Pallas kernels keep on-chip
+    coll_bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    coll_count_by_op: Dict[str, int] = field(default_factory=dict)
+    dot_count: int = 0
+
+    @property
+    def bytes_hbm_model(self) -> float:
+        """Memory-term bytes with kernel-resident traffic removed."""
+        return self.bytes_accessed - self.bytes_vmem_tagged
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes_by_op.values()))
+
+    def add_collective(self, op: str, nbytes: int, mult: float) -> None:
+        self.coll_bytes_by_op[op] = (self.coll_bytes_by_op.get(op, 0)
+                                     + int(nbytes * mult))
+        self.coll_count_by_op[op] = (self.coll_count_by_op.get(op, 0)
+                                     + int(round(mult)))
+
+
+def _dot_flops(comp: _Computation, inst: _Instr) -> float:
+    out_elems = 1
+    for _, dims in inst.out_shapes:
+        for d in dims:
+            out_elems *= d
+    lhs_shapes = comp.symbols.get(inst.operands[0], []) \
+        if inst.operands else []
+    lhs_dims = lhs_shapes[0][1] if lhs_shapes else ()
+    contracted = 1
+    cd = _LHS_CDIMS_RE.search(inst.attr_str)
+    if cd and cd.group(1):
+        for idx in cd.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contracted *= lhs_dims[i]
+    return 2.0 * out_elems * contracted
+
+
+# ops that move no data (metadata / aliasing only)
+FREE_OPS = {"get-tuple-element", "tuple", "parameter", "bitcast",
+            "after-all", "constant", "reshape", "optimization-barrier",
+            "partition-id", "replica-id"}
+# ops whose traffic is ~2× their OUTPUT (they touch a slice, not the
+# whole operand)
+SLICED_OPS = {"dynamic-slice", "slice", "gather", "iota", "broadcast",
+              "pad", "concatenate", "copy", "transpose"}
+_SLICE_FAMILY = {"dynamic-slice", "slice", "gather"}
+
+
+def inst_bytes(comps: Dict[str, _Computation], comp: _Computation,
+               inst: _Instr) -> int:
+    """HBM-traffic model for one top-level instruction."""
+    if inst.op in FREE_OPS:
+        return 0
+    out_b = _nbytes(inst.out_shapes)
+    if inst.op in SLICED_OPS:
+        return 2 * out_b
+    if inst.op == "dynamic-update-slice":
+        # read+write of the update region only
+        return 2 * (_nbytes(comp.symbols.get(inst.operands[1], []))
+                    if len(inst.operands) > 1 else out_b)
+    if inst.op == "scatter":
+        return 2 * (_nbytes(comp.symbols.get(inst.operands[2], []))
+                    if len(inst.operands) > 2 else out_b)
+    if inst.op == "fusion" and inst.calls and inst.calls[0] in comps:
+        return _fusion_bytes(comps, comp, inst)
+    operand_bytes = sum(
+        _nbytes(comp.symbols.get(o, [])) for o in inst.operands)
+    return out_b + operand_bytes
+
+
+# ops that merely re-express a value inside a fusion (never HBM traffic)
+_TRANSPARENT = {"convert", "bitcast", "reshape", "copy", "transpose",
+                "broadcast"}
+
+
+def _fusion_bytes(comps: Dict[str, _Computation], comp: _Computation,
+                  inst: _Instr) -> int:
+    """HBM traffic of a fusion = params read + output written, with:
+
+    * params consumed only through slice-family ops (via transparent
+      converts/reshapes) charged at the slice size — scan bodies slice
+      one layer out of stacked weights/caches;
+    * a root dynamic-update-slice (again through transparent wrappers)
+      whose updated operand is a param ⇒ in-place update on TPU (scan-ys
+      aliasing): charge 2× the update region instead of read+write of
+      the whole buffer.
+
+    Fusion internals never touch HBM by definition — only the boundary
+    counts.
+    """
+    callee = comps[inst.calls[0]]
+    defs = {i.name: i for i in callee.instrs}
+    consumers: Dict[str, List[_Instr]] = {}
+    for i in callee.instrs:
+        for o in i.operands:
+            consumers.setdefault(o, []).append(i)
+
+    def slice_only_bytes(name: str, depth: int = 0) -> Optional[int]:
+        """If every transitive use of ``name`` is a slice (through
+        transparent ops), return summed slice-output bytes, else None."""
+        if depth > 8:
+            return None
+        total = 0
+        for u in consumers.get(name, []):
+            if u.op in _SLICE_FAMILY and u.operands and \
+                    u.operands[0] == name:
+                total += _nbytes(u.out_shapes)
+            elif u.op in _TRANSPARENT:
+                sub = slice_only_bytes(u.name, depth + 1)
+                if sub is None:
+                    return None
+                total += sub
+            else:
+                return None
+        return total
+
+    # root analysis: walk back through transparent ops to a DUS
+    root = callee.instrs[-1] if callee.instrs else None
+    dus_update_bytes = None
+    dus_target_param = None
+    node = root
+    hops = 0
+    while node is not None and node.op in _TRANSPARENT and hops < 8 \
+            and node.operands:
+        node = defs.get(node.operands[0])
+        hops += 1
+    if node is not None and node.op == "dynamic-update-slice" \
+            and len(node.operands) > 1:
+        dus_update_bytes = _nbytes(callee.symbols.get(node.operands[1],
+                                                      []))
+        # trace operand-0 back through transparent ops to a param
+        tgt = defs.get(node.operands[0])
+        hops = 0
+        name0 = node.operands[0]
+        while tgt is not None and tgt.op in _TRANSPARENT and hops < 8 \
+                and tgt.operands:
+            name0 = tgt.operands[0]
+            tgt = defs.get(name0)
+            hops += 1
+        if name0 in callee.param_order:
+            dus_target_param = name0
+
+    if dus_update_bytes is not None and dus_target_param is not None:
+        charge = 2 * dus_update_bytes      # in-place write+read of region
+    else:
+        charge = _nbytes(inst.out_shapes)
+
+    for i, operand in enumerate(inst.operands):
+        pname = (callee.param_order[i]
+                 if i < len(callee.param_order) else None)
+        if pname is not None and pname == dus_target_param:
+            continue                        # in-place DUS target
+        if pname is not None:
+            sb = slice_only_bytes(pname)
+            if sb is not None:
+                charge += sb
+                continue
+        charge += _nbytes(comp.symbols.get(operand, []))
+    return charge
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    cost = HloCost()
+    entry = comps.get("__entry__")
+    if entry is None:
+        return cost
+
+    def flops_of(comp: _Computation, mult: float, depth: int) -> None:
+        if depth > 24:
+            return
+        for inst in comp.instrs:
+            if inst.op == "dot":
+                cost.flops += _dot_flops(comp, inst) * mult
+                cost.dot_count += int(round(mult))
+            if inst.op == "while" and inst.while_body in comps:
+                trips = inst.trip_count or 1
+                flops_of(comps[inst.while_body], mult * trips, depth + 1)
+            else:
+                for callee in inst.calls:
+                    if callee in comps:
+                        flops_of(comps[callee], mult, depth + 1)
+
+    def visit(comp: _Computation, mult: float, depth: int) -> None:
+        if depth > 24:
+            return
+        for inst in comp.instrs:
+            if inst.op == "dot":
+                cost.flops += _dot_flops(comp, inst) * mult
+                cost.dot_count += int(round(mult))
+            nb = inst_bytes(comps, comp, inst) * mult
+            cost.bytes_accessed += nb
+            if inst.vmem_tagged:
+                cost.bytes_vmem_tagged += nb
+            op = inst.op
+            if op.endswith("-start"):
+                op = op[: -len("-start")]
+            if op in _COLLECTIVES:
+                cost.add_collective(op, _nbytes(inst.out_shapes), mult)
+            if inst.op == "while" and inst.while_body in comps:
+                trips = inst.trip_count or 1
+                visit(comps[inst.while_body], mult * trips, depth + 1)
+            else:
+                for callee in inst.calls:
+                    if callee in comps:
+                        # descend for FLOPs only: fusion internals do not
+                        # touch HBM.  vmem-tagged fusions are kernel-
+                        # resident: bucket their callsite traffic.
+                        flops_of(comps[callee], mult, depth + 1)
+
+    visit(entry, 1.0, 0)
+    return cost

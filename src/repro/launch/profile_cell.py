@@ -1,0 +1,84 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Per-op cost profile of one dry-run cell — the §Perf 'profiler'.
+
+Prints the top contributors to the memory term (bytes by op × shape),
+the compute term (flops by dot shape), and the collective term (bytes by
+collective × shape), with trip-count multiplication.  Hypotheses in
+EXPERIMENTS.md §Perf are formed against this output.
+
+Usage:
+  python -m repro.launch.profile_cell --arch granite-8b \
+      --shape decode_32k --mesh single [--top 20] [--override '{...}']
+"""
+
+import argparse
+import json
+from collections import Counter
+
+
+def profile(arch: str, shape: str, mesh: str, top: int = 20,
+            overrides=None):
+    from repro.launch import hlo_costs as H
+    from repro.launch.dryrun import build_lowered
+
+    lowered, mesh_obj, cfg, skip = build_lowered(arch, shape, mesh,
+                                                 overrides)
+    if lowered is None:
+        print(f"SKIP: {skip}")
+        return
+    compiled = lowered.compile()
+    comps = H.parse_hlo(compiled.as_text())
+    entry = comps["__entry__"]
+
+    bytes_by = Counter()
+    flops_by = Counter()
+    coll_by = Counter()
+
+    def visit(comp, mult, depth=0):
+        if depth > 24:
+            return
+        for inst in comp.instrs:
+            shape0 = inst.out_shapes[0] if inst.out_shapes else ("?", ())
+            tag = "VMEM/" if inst.vmem_tagged else ""
+            key = f"{tag}{inst.op} {shape0[0]}{list(shape0[1])}"
+            bytes_by[key] += H.inst_bytes(comps, comp, inst) * mult
+            if inst.op == "dot":
+                flops_by[key] += H._dot_flops(comp, inst) * mult
+            opn = inst.op[:-6] if inst.op.endswith("-start") else inst.op
+            if opn in H._COLLECTIVES:
+                coll_by[key] += H._nbytes(inst.out_shapes) * mult
+            if inst.op == "while" and inst.while_body in comps:
+                visit(comps[inst.while_body],
+                      mult * (inst.trip_count or 1), depth + 1)
+    visit(entry, 1.0)
+
+    print(f"=== {arch} × {shape} × {mesh} per-device profile ===")
+    print(f"-- top {top} bytes (GB, per device per step) --")
+    for k, v in bytes_by.most_common(top):
+        print(f"  {v / 1e9:10.2f}  {k}")
+    print(f"-- top {top} dot flops (GFLOP, per device) --")
+    for k, v in flops_by.most_common(top):
+        print(f"  {v / 1e9:10.2f}  {k}")
+    print(f"-- top {top} collective bytes (GB, per device) --")
+    for k, v in coll_by.most_common(top):
+        print(f"  {v / 1e9:10.2f}  {k}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--override", default="")
+    args = ap.parse_args(argv)
+    profile(args.arch, args.shape, args.mesh, args.top,
+            json.loads(args.override) if args.override else None)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

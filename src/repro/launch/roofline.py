@@ -1,0 +1,210 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs            / (chips × peak_FLOP/s)
+  memory     = HLO_bytes_accessed   / (chips × HBM_bw)
+  collective = collective_bytes     / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so :func:`collective_bytes` parses the post-partitioning
+HLO text and sums the operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[16,512,4096]{2,1,0}" or "f32[128]"
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# "%name = TYPE[SHAPE] op-name(", with optional leading spaces/ROOT
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[d0,d1,...]' shape string (0 if not parseable)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective in the (SPMD) HLO.
+
+    The output shape of all-gather / all-to-all / permute equals the
+    moved payload per participating device; for all-reduce and
+    reduce-scatter the output is the standard accounting of the payload a
+    device contributes.  'start' variants are counted; 'done' variants
+    are skipped (same tensor, avoids double counting).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVE_OPS:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + nbytes
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float          # HBM-model bytes (kernel-resident removed)
+    coll_bytes: float
+    coll_by_op: Dict[str, int]
+    model_flops: float
+    bytes_per_device: Optional[float]
+    hlo_bytes_raw: Optional[float] = None   # including kernel-resident
+    bytes_vmem_tagged: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful work / achievable step time: MODEL_FLOPS/(chips·peak)
+        over the max roofline term — the score reported in §Perf."""
+        t_use = self.model_flops / (self.chips * PEAK_FLOPS_BF16)
+        t_step = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_use / t_step if t_step else 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "hlo_bytes_raw": self.hlo_bytes_raw,
+            "bytes_vmem_tagged": self.bytes_vmem_tagged,
+            "coll_bytes": self.coll_bytes, "coll_by_op": self.coll_by_op,
+            "model_flops": self.model_flops,
+            "bytes_per_device": self.bytes_per_device,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def extract_cost(compiled) -> Tuple[float, float]:
+    """(flops, bytes accessed) from compiled.cost_analysis()."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    # cpu backend reports 'bytes accessed'; some report per-space keys
+    byts = float(ca.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in ca.items()
+                   if k.startswith("bytes accessed"))
+    return flops, byts
+
+
+def extract_memory(compiled) -> Optional[float]:
+    """Per-device bytes from memory_analysis(), if the backend reports it."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    try:
+        return float(ma.argument_size_in_bytes
+                     + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes
+                     + ma.generated_code_size_in_bytes)
+    except AttributeError:
+        return None
+
+
+def model_flops_for(cfg, shape_spec, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params.
+
+    D = tokens processed by the step: B·S for train/prefill, B for decode.
+    """
+    n = cfg.active_param_count() if cfg.is_moe else cfg.param_count()
+    if kind == "train":
+        d = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence
+    return 2.0 * n * shape_spec.global_batch

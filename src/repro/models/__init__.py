@@ -1,0 +1,10 @@
+"""Model definitions: composable pure-JAX layers covering every assigned
+architecture family (dense / MoE / SSM / hybrid / VLM / audio)."""
+
+from repro.models.model import (
+    Model,
+    decode_state_specs,
+    init_params,
+)
+
+__all__ = ["Model", "decode_state_specs", "init_params"]

@@ -1,0 +1,307 @@
+"""Prefill + single-token decode paths (serve_step) for every family.
+
+Caches are explicit pytrees of arrays (inputs AND outputs of the jitted
+step, donated by the serving loop):
+
+  dense/moe/vlm/audio: {"k","v": [L, b, S_max, kv, hd]}
+  ssm:                 {"conv": [L, b, ck-1, conv_dim],
+                        "ssm":  [L, b, H, N, P] fp32}
+  hybrid:              ssm caches + {"k","v": [A, b, S_max, kv, hd]}
+                       (A = one KV cache per shared-attn application —
+                       weights are shared, KV is not)
+
+``pos`` is the per-sequence write position ([b] int32); the engine owns
+its increment.  The recurrent state of SSM archs is the branchable
+BR_MEMORY domain (DESIGN §6): forking a generation branch copies one
+small state tensor instead of KV pages.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.mesh import ParallelPlan, SINGLE_DEVICE
+from repro.models import layers as L
+from repro.models.moe import moe_block
+from repro.models.ssm import (
+    causal_conv1d,
+    mamba_decode_block,
+    ssd_chunked,
+    _split_proj,
+    _split_xbc,
+)
+from repro.models.transformer import (
+    _shared_attn_block,
+    embed_tokens,
+    lm_head,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ArchConfig, batch: int, max_len: int
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        shape = (cfg.num_layers, batch, max_len, kv, hd)
+        out["k"] = jax.ShapeDtypeStruct(shape, dt)
+        out["v"] = jax.ShapeDtypeStruct(shape, dt)
+    if cfg.family in ("ssm", "hybrid"):
+        ck, cdim = cfg.ssm_conv_kernel, cfg.ssm_conv_dim
+        H, N, Pd = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        out["conv"] = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, ck - 1, cdim), dt)
+        out["ssm"] = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, H, N, Pd), jnp.float32)
+    if cfg.family == "hybrid":
+        n_apps = cfg.num_layers // cfg.attn_every
+        shape = (n_apps, batch, max_len, kv, hd)
+        out["k"] = jax.ShapeDtypeStruct(shape, dt)
+        out["v"] = jax.ShapeDtypeStruct(shape, dt)
+    return out
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int
+                      ) -> Dict[str, jax.Array]:
+    return {k: jnp.zeros(v.shape, v.dtype)
+            for k, v in decode_state_specs(cfg, batch, max_len).items()}
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    cfg: ArchConfig,
+    p: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,          # [b, 1] (or [b, 1, cb])
+    pos: jax.Array,             # [b]
+    *,
+    plan: ParallelPlan = SINGLE_DEVICE,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One new token for every sequence.  Returns (logits, new_cache)."""
+    h = embed_tokens(cfg, p, tokens)
+    dp = plan.dp
+    h = plan.constrain(h, dp, None, None)
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(h, xs):
+            lp, kc, vc = xs
+            x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = L.attention_decode_block(cfg, lp["attn"], x, pos,
+                                                 kc, vc)
+            h = h + a
+            x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                m, _ = moe_block(cfg, lp["moe"], x, mesh=plan.mesh,
+                                 dp_axes=plan.dp_axes, tp_axis=plan.tp_axis)
+            else:
+                m = L.mlp_block(cfg, lp["mlp"], x)
+            return h + m, (kc, vc)
+
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (p["layers"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, conv, ssm = xs
+            x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, conv, ssm = mamba_decode_block(cfg, lp["mamba"], x, conv, ssm)
+            return h + y, (conv, ssm)
+
+        h, (conv_new, ssm_new) = jax.lax.scan(
+            body, h, (p["layers"], cache["conv"], cache["ssm"]))
+        new_cache["conv"], new_cache["ssm"] = conv_new, ssm_new
+
+    elif cfg.family == "hybrid":
+        # h0 for the shared block: the embedding output of THIS token,
+        # plus the engine-maintained running h0 convention: zamba feeds
+        # the current token's embedding — use it directly.
+        h0 = h
+        k = cfg.attn_every
+        n_groups = cfg.num_layers // k
+        tail_n = cfg.num_layers % k
+
+        def regroup(x):
+            return x[: n_groups * k].reshape(n_groups, k, *x.shape[1:])
+
+        main_lp = jax.tree_util.tree_map(regroup, p["layers"])
+        tail_lp = jax.tree_util.tree_map(
+            lambda x: x[n_groups * k:], p["layers"])
+        main_conv, tail_conv = (regroup(cache["conv"]),
+                                cache["conv"][n_groups * k:])
+        main_ssm, tail_ssm = (regroup(cache["ssm"]),
+                              cache["ssm"][n_groups * k:])
+
+        def mamba_one(h, xs):
+            lp, conv, ssm = xs
+            x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, conv, ssm = mamba_decode_block(cfg, lp["mamba"], x, conv, ssm)
+            return h + y, (conv, ssm)
+
+        def group_body(h, xs):
+            glp, gconv, gssm, kc, vc = xs
+            h, (gconv, gssm) = jax.lax.scan(mamba_one, h,
+                                            (glp, gconv, gssm))
+            # shared attention with decode KV cache
+            x = jnp.concatenate([h, h0], axis=-1) @ p["shared"]["w_concat"]
+            xa = L.rms_norm(x, p["shared"]["ln1"], cfg.norm_eps)
+            a, kc, vc = L.attention_decode_block(cfg, p["shared"]["attn"],
+                                                 xa, pos, kc, vc)
+            x = x + a
+            m = L.mlp_block(cfg, p["shared"]["mlp"],
+                            L.rms_norm(x, p["shared"]["ln2"], cfg.norm_eps))
+            return h + x + m, (gconv, gssm, kc, vc)
+
+        h, (g_conv, g_ssm, k_new, v_new) = jax.lax.scan(
+            group_body, h, (main_lp, main_conv, main_ssm,
+                            cache["k"], cache["v"]))
+        conv_out = [g_conv.reshape(n_groups * k, *g_conv.shape[2:])]
+        ssm_out = [g_ssm.reshape(n_groups * k, *g_ssm.shape[2:])]
+        if tail_n:
+            h, (tc, ts) = jax.lax.scan(mamba_one, h,
+                                       (tail_lp, tail_conv, tail_ssm))
+            conv_out.append(tc)
+            ssm_out.append(ts)
+        new_cache["conv"] = jnp.concatenate(conv_out, axis=0)
+        new_cache["ssm"] = jnp.concatenate(ssm_out, axis=0)
+        new_cache["k"], new_cache["v"] = k_new, v_new
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+    return lm_head(cfg, p, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(
+    cfg: ArchConfig,
+    p: Params,
+    tokens: jax.Array,
+    frontend_embed: Optional[jax.Array] = None,
+    *,
+    max_len: Optional[int] = None,
+    plan: ParallelPlan = SINGLE_DEVICE,
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Process the prompt; returns (last-position logits, decode cache)."""
+    b, s = tokens.shape[:2]
+    max_len = max_len or s
+    pad = max_len - s
+    assert pad >= 0
+    h = embed_tokens(cfg, p, tokens, frontend_embed)
+    positions = jnp.arange(s)
+    dp = plan.dp
+    h = plan.constrain(h, dp, None, None)
+    cache: Dict[str, jax.Array] = {}
+
+    def pad_cache(x):  # [b, s, kv, hd] -> [b, max_len, kv, hd]
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(h, lp):
+            x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.qkv_project(cfg, lp["attn"], x, positions)
+            a = L.chunked_causal_attention(q, k, v, chunk=attn_chunk)
+            h = h + jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
+            x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                m, _ = moe_block(cfg, lp["moe"], x, mesh=plan.mesh,
+                                 dp_axes=plan.dp_axes, tp_axis=plan.tp_axis)
+            else:
+                m = L.mlp_block(cfg, lp["mlp"], x)
+            return h + m, (pad_cache(k), pad_cache(v))
+
+        h, (ks, vs) = jax.lax.scan(body, h, p["layers"])
+        cache["k"], cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, conv, ssm = _mamba_prefill(cfg, lp["mamba"], x)
+            return h + y, (conv, ssm)
+
+        h, (convs, ssms) = jax.lax.scan(body, h, p["layers"])
+        cache["conv"], cache["ssm"] = convs, ssms
+
+    elif cfg.family == "hybrid":
+        h0 = h
+        k = cfg.attn_every
+        n_groups = cfg.num_layers // k
+        tail_n = cfg.num_layers % k
+        main_lp = jax.tree_util.tree_map(
+            lambda x: x[: n_groups * k].reshape(n_groups, k, *x.shape[1:]),
+            p["layers"])
+        tail_lp = jax.tree_util.tree_map(
+            lambda x: x[n_groups * k:], p["layers"])
+
+        def mamba_one(h, lp):
+            x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, conv, ssm = _mamba_prefill(cfg, lp["mamba"], x)
+            return h + y, (conv, ssm)
+
+        def group_body(h, glp):
+            h, (gconv, gssm) = jax.lax.scan(mamba_one, h, glp)
+            x = jnp.concatenate([h, h0], axis=-1) @ p["shared"]["w_concat"]
+            xa = L.rms_norm(x, p["shared"]["ln1"], cfg.norm_eps)
+            q, kk, vv = L.qkv_project(cfg, p["shared"]["attn"], xa,
+                                      positions)
+            a = L.chunked_causal_attention(q, kk, vv, chunk=attn_chunk)
+            x = x + jnp.einsum("bshk,hkd->bsd", a,
+                               p["shared"]["attn"]["wo"])
+            m = L.mlp_block(cfg, p["shared"]["mlp"],
+                            L.rms_norm(x, p["shared"]["ln2"], cfg.norm_eps))
+            return h + x + m, (gconv, gssm, pad_cache(kk), pad_cache(vv))
+
+        h, (g_conv, g_ssm, ks, vs) = jax.lax.scan(group_body, h, main_lp)
+        conv_out = [g_conv.reshape(n_groups * k, *g_conv.shape[2:])]
+        ssm_out = [g_ssm.reshape(n_groups * k, *g_ssm.shape[2:])]
+        if tail_n:
+            h, (tc, ts) = jax.lax.scan(mamba_one, h, tail_lp)
+            conv_out.append(tc)
+            ssm_out.append(ts)
+        cache["conv"] = jnp.concatenate(conv_out, axis=0)
+        cache["ssm"] = jnp.concatenate(ssm_out, axis=0)
+        cache["k"], cache["v"] = ks, vs
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+    return lm_head(cfg, p, h[:, -1:, :]), cache
+
+
+def _mamba_prefill(cfg: ArchConfig, lp: Params, x: jax.Array):
+    """Mamba block that also returns (conv_state, ssm_state)."""
+    b, s, _ = x.shape
+    di, H, Pd = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    ck = cfg.ssm_conv_kernel
+    z, xBC_pre, dt = _split_proj(cfg, x @ lp["in_proj"])
+    # conv state = last ck-1 *pre-activation* conv inputs
+    conv_state = xBC_pre[:, -(ck - 1):, :]
+    xBC = causal_conv1d(xBC_pre, lp["conv_w"], lp["conv_b"])
+    xs, B, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(b, s, H, Pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    y, ssm_state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk)
+    y = y + lp["D"].astype(y.dtype)[None, None, :, None] * xs
+    from repro.models.layers import gated_rms_norm
+
+    y = gated_rms_norm(y.reshape(b, s, di), z, lp["norm_w"], cfg.norm_eps)
+    return y @ lp["out_proj"], conv_state, ssm_state

@@ -1,0 +1,258 @@
+"""Shared transformer layers: norms, rotary, GQA attention, MLP variants.
+
+Everything is a pure function over explicit parameter pytrees; layer
+parameters are *stacked* along a leading ``[L, ...]`` axis so the model
+stack is a single ``lax.scan`` — compile time is O(1) in depth, which is
+what makes 94-layer × 512-device dry-runs tractable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype: Any,
+               fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) > 1 else shape[-1]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def gated_rms_norm(x: jax.Array, z: jax.Array, weight: jax.Array,
+                   eps: float) -> jax.Array:
+    """Mamba2's output norm: RMSNorm(x * silu(z))."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., s, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]              # [..., s, 1, hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked-causal = flash-equivalent math, O(S·chunk) memory)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ArchConfig, key: jax.Array, dtype: Any) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, h, hd), dtype, fan_in=d),
+        "wk": dense_init(ks[1], (d, kv, hd), dtype, fan_in=d),
+        "wv": dense_init(ks[2], (d, kv, hd), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (h, hd, d), dtype, fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def qkv_project(cfg: ArchConfig, p: Params, x: jax.Array,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             *, chunk: int = 1024) -> jax.Array:
+    """Causal GQA attention with O(S·chunk) score memory.
+
+    q: [b, s, h, hd]; k, v: [b, s, kv, hd] with h = kv * group.
+    Mathematically identical to full softmax attention (and to the
+    flash_attention Pallas kernel's output) — scores are computed one
+    query chunk at a time via ``lax.scan`` ("lax-flash").
+    """
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = math.gcd(chunk, s)
+    n_chunks = s // chunk
+
+    qr = q.reshape(b, n_chunks, chunk, kvh, group, hd)
+    qr = jnp.moveaxis(qr, 1, 0)                     # [nc, b, c, kv, g, hd]
+    kpos = jnp.arange(s)
+
+    # The score/prob tensors live in VMEM under the flash_attention
+    # Pallas kernel (DESIGN §7); the tag lets the roofline parser separate
+    # their would-be-HBM traffic out of the memory term.  jax.checkpoint
+    # forces backward to RECOMPUTE them per chunk instead of stacking
+    # S²-sized residuals across the scan — the flash-backward structure.
+    @jax.checkpoint
+    def _chunk_attn(q_c, c_idx, k_, v_):
+        with jax.named_scope("vmem_resident"):
+            scores = jnp.einsum("bqkgh,bskh->bkgqs", q_c, k_,
+                                preferred_element_type=jnp.float32) * scale
+            qpos = c_idx * chunk + jnp.arange(chunk)    # [c]
+            mask = kpos[None, :] <= qpos[:, None]       # [c, s]
+            scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+            probs = jax.nn.softmax(scores, axis=-1)     # fp32
+            return jnp.einsum("bkgqs,bskh->bqkgh",
+                              probs.astype(v_.dtype), v_)
+
+    def body(carry, q_c_and_idx):
+        q_c, c_idx = q_c_and_idx                    # [b, c, kv, g, hd]
+        return carry, _chunk_attn(q_c, c_idx, k, v)
+
+    _, out = jax.lax.scan(body, None, (qr, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(out, 0, 1)                   # [b, nc, c, kv, g, hd]
+    return out.reshape(b, s, h, hd)
+
+
+def full_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array
+                          ) -> jax.Array:
+    """Reference O(S²)-memory attention (small shapes / oracles only)."""
+    return chunked_causal_attention(q, k, v, chunk=q.shape[1])
+
+
+def decode_attention_dense(q: jax.Array, k_cache: jax.Array,
+                           v_cache: jax.Array, lengths: jax.Array
+                           ) -> jax.Array:
+    """One-token decode attention against a dense [b, S, kv, hd] cache.
+
+    q: [b, 1, h, hd]; lengths: [b] — number of valid cache positions
+    (including the token just written).
+    """
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    group = h // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, kvh, group, hd)
+    # scores stay in VMEM under the paged_attention Pallas kernel
+    with jax.named_scope("vmem_resident"):
+        scores = jnp.einsum("bkgh,bskh->bkgs", qr, k_cache,
+                            preferred_element_type=jnp.float32) * scale
+        pos = jnp.arange(k_cache.shape[1])
+        mask = pos[None, :] < lengths[:, None]          # [b, S]
+        scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgs,bskh->bkgh", probs.astype(v_cache.dtype),
+                         v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def attention_block(cfg: ArchConfig, p: Params, x: jax.Array,
+                    positions: jax.Array, *, chunk: int = 1024) -> jax.Array:
+    q, k, v = qkv_project(cfg, p, x, positions)
+    out = chunked_causal_attention(q, k, v, chunk=chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode_block(
+    cfg: ArchConfig, p: Params, x: jax.Array, pos: jax.Array,
+    k_cache: jax.Array, v_cache: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode: write this token's K/V at ``pos`` then attend.
+
+    x: [b, 1, d].  ``pos`` is either [b] (per-sequence positions →
+    scatter write) or a scalar (position-aligned batch, continuous-
+    batching style → one dynamic_update_slice; §Perf shows the scatter
+    path streams the whole cache through convert chains, the aligned
+    path writes one token row).  Returns (out, new_k, new_v).
+    """
+    b = x.shape[0]
+    if pos.ndim == 0:
+        positions = pos.reshape(1, 1)
+        q, k, v = qkv_project(cfg, p, x, positions)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k, (0, pos.astype(jnp.int32), 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v, (0, pos.astype(jnp.int32), 0, 0))
+        lengths = jnp.full((b,), pos + 1, jnp.int32)
+    else:
+        q, k, v = qkv_project(cfg, p, x, pos[:, None])
+        # scatter the new token at per-sequence positions
+        batch_idx = jnp.arange(b)
+        k_cache = k_cache.at[batch_idx, pos].set(k[:, 0])
+        v_cache = v_cache.at[batch_idx, pos].set(v[:, 0])
+        lengths = pos + 1
+    out = decode_attention_dense(q, k_cache, v_cache, lengths)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ArchConfig, key: jax.Array, dtype: Any,
+             d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "wu": dense_init(ks[0], (d, f), dtype),
+        "wd": dense_init(ks[1], (f, d), dtype),
+    }
+    if cfg.mlp_activation in ("swiglu", "geglu"):
+        p["wg"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp_block(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    act = cfg.mlp_activation
+    up = x @ p["wu"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * up
+    elif act == "sqrelu":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(f"unknown activation {act}")
+    return h @ p["wd"]

@@ -1,0 +1,80 @@
+"""Model facade: one object per architecture config.
+
+Wraps init / loss / prefill / decode with a :class:`ParallelPlan`, so the
+same code path serves CPU smoke tests, the single-pod mesh, and the
+multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.mesh import ParallelPlan, SINGLE_DEVICE
+from repro.models import decode as D
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+# re-exports used by configs.shapes and the launch layer
+decode_state_specs = D.decode_state_specs
+init_decode_state = D.init_decode_state
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    return T.init_transformer(cfg, key)
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    plan: ParallelPlan = field(default_factory=lambda: SINGLE_DEVICE)
+    remat: bool = True
+    attn_chunk: int = 1024
+    loss_chunk: int = 512
+    moe_aux_weight: float = 0.01
+
+    def init(self, key: jax.Array) -> Params:
+        return init_params(self.cfg, key)
+
+    # -- training ---------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        attn_chunk = min(self.attn_chunk, batch["tokens"].shape[1])
+        h, aux = T.forward(
+            cfg, params, batch["tokens"],
+            batch.get("frontend_embed"),
+            plan=self.plan, remat=self.remat, attn_chunk=attn_chunk,
+        )
+        xent = T.token_loss(cfg, params, h, batch["targets"],
+                            loss_chunk=min(self.loss_chunk,
+                                           batch["tokens"].shape[1]),
+                            plan=self.plan)
+        total = xent + self.moe_aux_weight * aux
+        return total, {"xent": xent, "moe_aux": aux}
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params: Params, tokens: jax.Array,
+                frontend_embed: Optional[jax.Array] = None,
+                max_len: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        return D.prefill(
+            self.cfg, params, tokens, frontend_embed,
+            max_len=max_len, plan=self.plan,
+            attn_chunk=min(self.attn_chunk, tokens.shape[1]),
+        )
+
+    def decode_step(self, params: Params, cache: Dict[str, jax.Array],
+                    tokens: jax.Array, pos: jax.Array
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        return D.decode_step(self.cfg, params, cache, tokens, pos,
+                             plan=self.plan)
+
+    def init_decode_state(self, batch: int, max_len: int
+                          ) -> Dict[str, jax.Array]:
+        return D.init_decode_state(self.cfg, batch, max_len)

@@ -1,0 +1,211 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060) maps naturally to
+the MXU: within-chunk terms are batched matmuls over ``[chunk, chunk]``
+tiles, and the inter-chunk recurrence is a short ``lax.scan`` over
+``seq/chunk`` steps carrying the ``[H, N, P]`` state.  Decode is an O(1)
+state update — the recurrent state is *the* branchable device state for
+SSM archs (DESIGN §6): a branch fork copies one small tensor.
+
+Layout conventions:
+  x:   [b, s, H, P]   (H = heads = d_inner/P, P = head dim)
+  dt:  [b, s, H]      (post-softplus, fp32)
+  A:   [H]            (negative, fp32)
+  B,C: [b, s, N]      (single group, shared across heads)
+  state: [b, H, N, P]
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, gated_rms_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    chunk: int, initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [b,s,H,P], final_state [b,H,N,P])."""
+    b, s, H, Pd = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        import math as _math
+
+        chunk = _math.gcd(chunk, s)
+    nc = s // chunk
+
+    xr = x.reshape(b, nc, chunk, H, Pd)
+    dtr = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, N)
+    Cr = C.reshape(b, nc, chunk, N)
+
+    dA = dtr * A.astype(jnp.float32)                 # [b,nc,q,H], negative
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+
+    # ---- intra-chunk (dual / attention-like form) ----------------------
+    # the [Q,Q] decay/score tiles live in VMEM under the ssd_scan Pallas
+    # kernel (DESIGN §7) — tagged for the roofline parser
+    with jax.named_scope("vmem_resident"):
+        cb = jnp.einsum("bcqn,bckn->bcqk", Cr, Br,
+                        preferred_element_type=jnp.float32)
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,q,k,H]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+        W = (cb[..., None] * L * dtr[:, :, None, :, :]).astype(x.dtype)
+        y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", W, xr)
+
+    # ---- chunk boundary states -----------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [b,nc,q,H]
+    wk = (dtr * decay_to_end).astype(x.dtype)
+    S = jnp.einsum("bckh,bckn,bckhp->bchnp", wk, Br, xr)   # [b,nc,H,N,P]
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [b,nc,H]
+    in_decay = jnp.exp(cum).astype(x.dtype)                # [b,nc,q,H]
+    h0 = (jnp.zeros((b, H, N, Pd), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def body(h, per_chunk):
+        S_c, cd_c, C_c, ind_c = per_chunk
+        y_off = jnp.einsum("bqn,bhnp,bqh->bqhp",
+                           C_c, h.astype(x.dtype), ind_c)
+        h = cd_c[:, :, None, None] * h + S_c.astype(jnp.float32)
+        return h, y_off
+
+    xs = (
+        jnp.moveaxis(S, 1, 0),
+        jnp.moveaxis(chunk_decay, 1, 0),
+        jnp.moveaxis(Cr, 1, 0),
+        jnp.moveaxis(in_decay, 1, 0),
+    )
+    hT, y_off = jax.lax.scan(body, h0, xs)
+    y = y_diag + jnp.moveaxis(y_off, 0, 1).reshape(b, nc, chunk, H, Pd)
+    return y.reshape(b, s, H, Pd), hT
+
+
+def ssd_decode_step(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+    state: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token SSD update.  x:[b,H,P] dt:[b,H] B,C:[b,N] state:[b,H,N,P]."""
+    dt = dt.astype(jnp.float32)
+    dA = jnp.exp(dt * A.astype(jnp.float32))              # [b,H]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, B.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: [b, s, c]; w: [c, ck]; depthwise causal conv + SiLU."""
+    ck = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = sum(xp[:, i:i + s, :] * w[None, None, :, i] for i in range(ck))
+    return jax.nn.silu(y + b)
+
+
+def conv1d_decode(x: jax.Array, conv_state: jax.Array, w: jax.Array,
+                  b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: [b, c] new element; conv_state: [b, ck-1, c].  Returns (y, state)."""
+    window = jnp.concatenate([conv_state, x[:, None, :]], axis=1)  # [b,ck,c]
+    y = jnp.einsum("bkc,ck->bc", window, w)
+    return jax.nn.silu(y + b), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba(cfg: ArchConfig, key: jax.Array, dtype: Any) -> Params:
+    d = cfg.d_model
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    cdim, ck = cfg.ssm_conv_dim, cfg.ssm_conv_kernel
+    dip = 2 * di + 2 * cfg.ssm_groups * N + H
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, dip), dtype, fan_in=d),
+        "conv_w": dense_init(ks[1], (cdim, ck), dtype, fan_in=ck),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.logspace(-3, -1, H, dtype=jnp.float32))),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype, fan_in=di),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    g = cfg.ssm_groups
+    cdim = cfg.ssm_conv_dim
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + cdim]
+    dt = zxbcdt[..., di + cdim:]
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ArchConfig, xBC: jax.Array):
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    xs = xBC[..., :di]
+    B = xBC[..., di:di + N]
+    C = xBC[..., di + N:]
+    return xs, B, C
+
+
+def mamba_block(cfg: ArchConfig, p: Params, x: jax.Array,
+                ) -> jax.Array:
+    """Training/prefill Mamba2 block.  x: [b, s, d]."""
+    b, s, _ = x.shape
+    di, H, Pd = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(cfg, x @ p["in_proj"])
+    xBC = causal_conv1d(xBC, p["conv_w"], p["conv_b"])
+    xs, B, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(b, s, H, Pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = gated_rms_norm(y.reshape(b, s, di), z, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_block(
+    cfg: ArchConfig, p: Params, x: jax.Array,
+    conv_state: jax.Array, ssm_state: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token Mamba2 step.  x: [b, 1, d].
+
+    conv_state: [b, ck-1, conv_dim]; ssm_state: [b, H, N, P].
+    """
+    b = x.shape[0]
+    di, H, Pd = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(cfg, x[:, 0] @ p["in_proj"])
+    xBC, conv_state = conv1d_decode(xBC, conv_state, p["conv_w"],
+                                    p["conv_b"])
+    xs, B, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(b, H, Pd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [b,H]
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_decode_step(xs, dt, A, B, C, ssm_state)
+    y = y + p["D"].astype(y.dtype)[None, :, None] * xs
+    y = gated_rms_norm(y.reshape(b, di), z, p["norm_w"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None, :], conv_state, ssm_state

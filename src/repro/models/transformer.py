@@ -1,0 +1,284 @@
+"""The layer stack for every assigned family, as a single ``lax.scan``.
+
+Families:
+* dense / vlm / audio — pre-norm attention + MLP blocks.
+* moe               — attention + shard_map EP MoE FFN.
+* ssm               — Mamba2 (SSD) blocks, attention-free.
+* hybrid (zamba2)   — Mamba2 backbone; ONE weight-shared attention+MLP
+  block applied after every ``attn_every`` Mamba layers on
+  ``concat([h, h0])`` (h0 = embedding output), Zamba-style.
+
+Layer params are stacked ``[L, ...]`` so compile time is depth-independent;
+remat (``jax.checkpoint``) wraps the scan body.  All functions are pure
+and take an explicit :class:`ParallelPlan` for sharding constraints.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.mesh import ParallelPlan, SINGLE_DEVICE
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_block
+from repro.models.ssm import (
+    init_mamba,
+    mamba_block,
+    mamba_decode_block,
+    ssd_chunked,
+)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def init_transformer(cfg: ArchConfig, key: jax.Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+
+    # embeddings
+    if cfg.num_codebooks > 1:
+        p["embed"] = L.dense_init(
+            keys[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+            dtype, fan_in=cfg.d_model)
+    else:
+        p["embed"] = L.dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                                  dtype, fan_in=cfg.d_model)
+    if cfg.frontend == "vlm_stub":
+        p["frontend_proj"] = L.dense_init(
+            keys[1], (cfg.d_model, cfg.d_model), dtype)
+
+    lkeys = jax.random.split(keys[2], cfg.num_layers)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def one(k):
+            ka, km = jax.random.split(k)
+            lp = {
+                "ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "attn": L.init_attention(cfg, ka, dtype),
+            }
+            if cfg.is_moe:
+                lp["moe"] = init_moe(cfg, km, dtype)
+            else:
+                lp["mlp"] = L.init_mlp(cfg, km, dtype)
+            return lp
+
+        p["layers"] = jax.vmap(one)(lkeys)
+    elif cfg.family == "ssm":
+        def one(k):
+            return {
+                "ln": jnp.ones((cfg.d_model,), dtype),
+                "mamba": init_mamba(cfg, k, dtype),
+            }
+
+        p["layers"] = jax.vmap(one)(lkeys)
+    elif cfg.family == "hybrid":
+        def one(k):
+            return {
+                "ln": jnp.ones((cfg.d_model,), dtype),
+                "mamba": init_mamba(cfg, k, dtype),
+            }
+
+        p["layers"] = jax.vmap(one)(lkeys)
+        ks = jax.random.split(keys[3], 3)
+        p["shared"] = {
+            "w_concat": L.dense_init(ks[0], (2 * cfg.d_model, cfg.d_model),
+                                     dtype),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(cfg, ks[1], dtype),
+            "mlp": L.init_mlp(cfg, ks[2], dtype),
+        }
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(
+            keys[4], (cfg.d_model, cfg.num_codebooks * cfg.vocab_size),
+            dtype, fan_in=cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ArchConfig, p: Params, tokens: jax.Array,
+                 frontend_embed: Optional[jax.Array] = None) -> jax.Array:
+    if cfg.num_codebooks > 1:
+        # tokens: [b, s, cb] — sum per-codebook embeddings (musicgen)
+        parts = [jnp.take(p["embed"][i], tokens[..., i], axis=0)
+                 for i in range(cfg.num_codebooks)]
+        h = sum(parts)
+    else:
+        h = jnp.take(p["embed"], tokens, axis=0)
+    if cfg.frontend == "vlm_stub" and frontend_embed is not None:
+        # stub frontend: precomputed patch embeddings occupy the prefix
+        fe = frontend_embed.astype(h.dtype) @ p["frontend_proj"]
+        h = jax.lax.dynamic_update_slice(h, fe, (0, 0, 0))
+    return h
+
+
+def lm_head(cfg: ArchConfig, p: Params, h: jax.Array) -> jax.Array:
+    """h: [b, s, d] -> logits [b, s, V] (or [b, s, cb, V])."""
+    if cfg.tie_embeddings:
+        w = p["embed"].T  # [d, V]
+        logits = h @ w
+    else:
+        logits = h @ p["lm_head"]
+    if cfg.num_codebooks > 1:
+        b, s, _ = h.shape
+        logits = logits.reshape(b, s, cfg.num_codebooks, cfg.vocab_size)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_layer(cfg: ArchConfig, plan: ParallelPlan, h, lp, positions,
+                    attn_chunk: int):
+    dp = plan.dp
+    h = plan.constrain(h, dp, None, None)
+    a = L.attention_block(cfg, lp["attn"], L.rms_norm(h, lp["ln1"],
+                                                      cfg.norm_eps),
+                          positions, chunk=attn_chunk)
+    h = h + a
+    x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        m, aux = moe_block(cfg, lp["moe"], x, mesh=plan.mesh,
+                           dp_axes=plan.dp_axes, tp_axis=plan.tp_axis)
+    else:
+        m, aux = L.mlp_block(cfg, lp["mlp"], x), jnp.float32(0)
+    return h + m, aux
+
+
+def _shared_attn_block(cfg: ArchConfig, plan: ParallelPlan, h, h0, sp,
+                       positions, attn_chunk: int):
+    """Zamba-style shared block on concat([h, h0])."""
+    x = jnp.concatenate([h, h0], axis=-1) @ sp["w_concat"]
+    a = L.attention_block(cfg, sp["attn"],
+                          L.rms_norm(x, sp["ln1"], cfg.norm_eps),
+                          positions, chunk=attn_chunk)
+    x = x + a
+    m = L.mlp_block(cfg, sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return h + x + m
+
+
+def forward(
+    cfg: ArchConfig,
+    p: Params,
+    tokens: jax.Array,
+    frontend_embed: Optional[jax.Array] = None,
+    *,
+    plan: ParallelPlan = SINGLE_DEVICE,
+    remat: bool = True,
+    attn_chunk: int = 1024,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (hidden [b,s,d], moe_aux scalar)."""
+    h = embed_tokens(cfg, p, tokens, frontend_embed)
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    dp = plan.dp
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _attn_mlp_layer(cfg, plan, h, lp, positions, attn_chunk)
+            return (h, aux + a), None
+
+        body = jax.checkpoint(body) if remat else body
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.float32(0)), p["layers"])
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h = plan.constrain(h, dp, None, None)
+            h = h + mamba_block(cfg, lp["mamba"],
+                                L.rms_norm(h, lp["ln"], cfg.norm_eps))
+            return h, None
+
+        body = jax.checkpoint(body) if remat else body
+        h, _ = jax.lax.scan(body, h, p["layers"])
+        aux = jnp.float32(0)
+    elif cfg.family == "hybrid":
+        h0 = h
+        k = cfg.attn_every
+        n_groups, tail = cfg.num_layers // k, cfg.num_layers % k
+        main = jax.tree_util.tree_map(
+            lambda x: x[: n_groups * k].reshape(n_groups, k, *x.shape[1:]),
+            p["layers"])
+        tail_layers = jax.tree_util.tree_map(
+            lambda x: x[n_groups * k:], p["layers"])
+
+        def mamba_one(h, lp):
+            h = plan.constrain(h, dp, None, None)
+            h = h + mamba_block(cfg, lp["mamba"],
+                                L.rms_norm(h, lp["ln"], cfg.norm_eps))
+            return h, None
+
+        def group_body(h, glp):
+            h, _ = jax.lax.scan(mamba_one, h, glp)
+            h = _shared_attn_block(cfg, plan, h, h0, p["shared"],
+                                   positions, attn_chunk)
+            return h, None
+
+        group_body = jax.checkpoint(group_body) if remat else group_body
+        h, _ = jax.lax.scan(group_body, h, main)
+        if tail:
+            h, _ = jax.lax.scan(mamba_one, h, tail_layers)
+        aux = jnp.float32(0)
+    else:
+        raise ValueError(cfg.family)
+
+    h = plan.constrain(h, dp, None, None)
+    return L.rms_norm(h, p["final_norm"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# loss (sequence-chunked cross-entropy so fp32 logits never materialize
+# for the full sequence at once)
+# ---------------------------------------------------------------------------
+
+def token_loss(cfg: ArchConfig, p: Params, h: jax.Array,
+               targets: jax.Array, *, loss_chunk: int = 512,
+               plan: ParallelPlan = SINGLE_DEVICE) -> jax.Array:
+    b, s, d = h.shape
+    loss_chunk = min(loss_chunk, s)
+    assert s % loss_chunk == 0
+    nc = s // loss_chunk
+    hr = jnp.moveaxis(h.reshape(b, nc, loss_chunk, d), 1, 0)
+    if cfg.num_codebooks > 1:
+        tr = jnp.moveaxis(
+            targets.reshape(b, nc, loss_chunk, cfg.num_codebooks), 1, 0)
+    else:
+        tr = jnp.moveaxis(targets.reshape(b, nc, loss_chunk), 1, 0)
+    # VLM: no next-token loss on stub image-patch positions
+    if cfg.frontend == "vlm_stub":
+        valid = (jnp.arange(s) >= cfg.frontend_tokens).astype(jnp.float32)
+    else:
+        valid = jnp.ones((s,), jnp.float32)
+    vr = jnp.moveaxis(valid.reshape(1, nc, loss_chunk), 1, 0)
+
+    def body(acc, xs):
+        h_c, t_c, v_c = xs
+        logits = lm_head(cfg, p, h_c).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None],
+                                   axis=-1)[..., 0]
+        nll = logz - gold                       # [b, c] or [b, c, cb]
+        if cfg.num_codebooks > 1:
+            nll = nll.mean(-1)
+        return acc + jnp.sum(nll * v_c), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0), (hr, tr, vr))
+    denom = jnp.maximum(valid.sum() * b, 1.0)
+    return total / denom

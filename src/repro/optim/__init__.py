@@ -1,0 +1,22 @@
+"""Optimizers, schedules, clipping, gradient compression — from scratch
+in pure JAX (no optax)."""
+
+from repro.optim.adamw import adamw
+from repro.optim.sgd import sgd_momentum
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.base import Optimizer, apply_updates
+from repro.optim.compress import (
+    ErrorFeedbackState,
+    compressed_gradients,
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+)
+
+__all__ = [
+    "adamw", "sgd_momentum", "constant", "cosine_warmup", "linear_warmup",
+    "clip_by_global_norm", "global_norm", "Optimizer", "apply_updates",
+    "ErrorFeedbackState", "compressed_gradients", "int8_compress",
+    "int8_decompress", "topk_compress",
+]

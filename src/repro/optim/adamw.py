@@ -1,0 +1,59 @@
+"""AdamW with fp32 moments (params may be bf16 — moments are the master
+precision, the standard large-model configuration)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def adamw(
+    lr: Union[float, Schedule],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params: Any) -> Any:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads: Any, state: Any, params: Any):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mu_hat = mu / b1c
+            nu_hat = nu / b2c
+            u = -lr_t * (mu_hat / (jnp.sqrt(nu_hat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, mu, nu
+
+        flat = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"],
+                                      params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update)

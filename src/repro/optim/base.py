@@ -1,0 +1,20 @@
+"""Optimizer interface: (init, update) pairs over pytrees."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    # update(grads, state, params) -> (updates, new_state)
+    update: Callable[[Any, Any, Any], Any]
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates
+    )

@@ -1,0 +1,120 @@
+"""Gradient compression for cross-pod reductions, with error feedback.
+
+At 1000+ nodes the ``pod`` axis all-reduce is the collective-roofline
+term that grows with cluster size (DESIGN §5).  Two standard compressors:
+
+* **int8 per-tensor quantization** — 4× volume reduction on bf16/f32
+  gradients; scale = max|g| per leaf.
+* **top-k sparsification** — keep the k largest-|g| entries per leaf.
+
+Both keep an **error-feedback** residual (Karimireddy et al.): the
+compression error is added back into the next step's gradient, preserving
+convergence.  ``compressed_gradients`` is dtype/shape-preserving so it
+drops into the train step around the cross-pod ``psum``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree like grads, fp32
+
+
+def ef_init(grads_like: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+def int8_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+
+def topk_compress(x: jax.Array, frac: float = 0.01
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (values, flat indices) of the k largest-|x| entries."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape
+                    ) -> jax.Array:
+    n = 1
+    for d in shape:
+        n *= d
+    return jnp.zeros((n,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback wrapper around a (possibly collective) reduction
+# ---------------------------------------------------------------------------
+
+def compressed_gradients(
+    grads: Any,
+    ef: ErrorFeedbackState,
+    *,
+    method: str = "int8",
+    topk_frac: float = 0.01,
+) -> Tuple[Any, ErrorFeedbackState]:
+    """Compress+decompress grads with error feedback.
+
+    The returned gradients are what the *receiving* side reconstructs;
+    the residual carries this step's quantization error into the next
+    step.  In the distributed train step this wraps the cross-pod psum:
+    each pod compresses its gradient contribution, the (4×-smaller)
+    payload is reduced, and decompression happens before the optimizer.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        if method == "int8":
+            q, scale = int8_compress(g32)
+            recon = int8_decompress(q, scale)
+        elif method == "topk":
+            vals, idx = topk_compress(g32, topk_frac)
+            recon = topk_decompress(vals, idx, g32.shape)
+        elif method == "none":
+            recon = g32
+        else:
+            raise ValueError(method)
+        return recon.astype(g.dtype), (g32 - recon)
+
+    flat = jax.tree_util.tree_map(one, grads, ef.residual)
+    is_t = lambda x: isinstance(x, tuple)
+    out = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_t)
+    res = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_t)
+    return out, ErrorFeedbackState(residual=res)
+
+
+def compression_ratio(method: str, dtype=jnp.bfloat16,
+                      topk_frac: float = 0.01) -> float:
+    """Payload bytes ratio vs uncompressed (for the roofline model)."""
+    bits = jnp.dtype(dtype).itemsize * 8
+    if method == "int8":
+        return 8.0 / bits
+    if method == "topk":
+        return topk_frac * (32 + 32) / bits
+    return 1.0

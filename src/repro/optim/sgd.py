@@ -1,0 +1,40 @@
+"""SGD with (Nesterov) momentum."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def sgd_momentum(lr: Union[float, Callable], momentum: float = 0.9,
+                 nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.float32(lr))
+
+    def init(params: Any) -> Any:
+        return {
+            "velocity": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads: Any, state: Any, params: Any):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, v):
+            g = g.astype(jnp.float32)
+            v = momentum * v + g
+            d = g + momentum * v if nesterov else v
+            return -lr_t * d, v
+
+        flat = jax.tree_util.tree_map(upd, grads, state["velocity"])
+        is_t = lambda x: isinstance(x, tuple)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=is_t)
+        vel = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=is_t)
+        return updates, {"velocity": vel, "step": step}
+
+    return Optimizer(init=init, update=update)

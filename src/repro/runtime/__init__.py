@@ -1,0 +1,6 @@
+from repro.runtime.train_loop import TrainState, build_train_step
+from repro.runtime.fault import FaultTolerantTrainer
+from repro.runtime.serve_loop import ServeEngine
+
+__all__ = ["TrainState", "build_train_step", "FaultTolerantTrainer",
+           "ServeEngine"]

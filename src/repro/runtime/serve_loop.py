@@ -1,0 +1,222 @@
+"""ServeEngine — continuous-batching serving with branchable paged KV.
+
+The paper's serving workload as a first-class engine feature:
+
+* KV lives in fixed-size **pages** ([L, n_pages, page, kv, hd] pools);
+  sequences hold block tables managed by :class:`KVBranchManager`.
+* ``fork(seq, n)`` creates N generation branches sharing every page
+  (CoW); the first append to a shared tail page triggers a single-page
+  device copy (the CoW fault).
+* ``commit(branch)`` promotes the branch into its parent and invalidates
+  siblings, whose pages are recycled — first-commit-wins.
+* nesting: branches fork sub-branches (Tree-of-Thoughts style).
+* decode runs the **paged-attention** path per layer (Pallas kernel on
+  TPU; the jnp gather oracle on CPU — same math).
+
+Only attention-family archs use paged KV; SSM archs branch their
+recurrent state through the BranchStore instead (DESIGN §6).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import KVBranchManager
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.models import layers as L
+from repro.models.model import Model
+from repro.models.transformer import embed_tokens, lm_head
+
+
+# ---------------------------------------------------------------------------
+# jitted paged decode step (dense/moe families)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def paged_decode_step(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,       # [L, n_pages, page, kv, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [b, max_pages]
+    lengths: jax.Array,       # [b] length BEFORE this token
+    slot_pages: jax.Array,    # [b] page for this token's KV
+    slot_offsets: jax.Array,  # [b] offset within that page
+    tokens: jax.Array,        # [b, 1]
+    impl: str = "ref",
+):
+    """One decode step over paged KV.  Returns (logits, k_pages, v_pages)."""
+    b = tokens.shape[0]
+    kvh, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    h = embed_tokens(cfg, params, tokens)
+    batch_idx = jnp.arange(b)
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], x, lengths[:, None])
+        # write this token's K/V into its (possibly CoW'd) page slot
+        kp = kp.at[slot_pages, slot_offsets].set(k[:, 0])
+        vp = vp.at[slot_pages, slot_offsets].set(v[:, 0])
+        qh = q.reshape(b, kvh, g, cfg.head_dim)
+        a = paged_attention(qh, kp, vp, block_tables, lengths + 1,
+                            impl=impl)
+        a = a.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+        h = h + jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
+        x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            from repro.models.moe import moe_block
+
+            m, _ = moe_block(cfg, lp["moe"], x)
+        else:
+            m = L.mlp_block(cfg, lp["mlp"], x)
+        return h + m, (kp, vp)
+
+    h, (k_pages, v_pages) = jax.lax.scan(
+        body, h, (params["layers"], k_pages, v_pages))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_head(cfg, params, h), k_pages, v_pages
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_pages(pages: jax.Array, src: jax.Array, dst: jax.Array
+                ) -> jax.Array:
+    """CoW fault service: copy pages[:, src] -> pages[:, dst]."""
+    return pages.at[:, dst].set(pages[:, src])
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Branch:
+    """A generation branch handle (sequence id + host token tail)."""
+
+    seq: int
+    tokens: List[int]
+    parent: Optional["Branch"] = None
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Any, *, num_pages: int = 256,
+                 page_size: int = 16, max_pages_per_seq: int = 32,
+                 attn_impl: str = "ref"):
+        cfg = model.cfg
+        assert cfg.family in ("dense", "vlm", "audio", "moe"), (
+            "paged-KV serving targets attention archs; SSM archs branch "
+            "their recurrent state via BranchStore (DESIGN §6)")
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.kv = KVBranchManager(num_pages=num_pages, page_size=page_size)
+        self.page_size = page_size
+        self.max_pages = max_pages_per_seq
+        self.attn_impl = attn_impl
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+                 cfg.head_dim)
+        self.k_pages = jnp.zeros(shape, dt)
+        self.v_pages = jnp.zeros(shape, dt)
+        self._tokens: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    def add_request(self, prompt: Sequence[int]) -> int:
+        """Prefill a prompt into a fresh paged sequence.
+
+        Invariant: ``kv.length == len(tokens) - 1`` — the last token is
+        "pending": its KV is written by the decode step that consumes it.
+        """
+        prompt = list(prompt)
+        assert prompt, "empty prompt"
+        n_cached = len(prompt) - 1
+        sid = self.kv.new_seq(length=n_cached)
+        if n_cached:
+            toks = jnp.asarray(prompt[:-1], jnp.int32)[None]
+            # dense prefill, then scatter the cache into this seq's pages
+            _, cache = self.model.prefill(self.params, toks)
+            table = self.kv.block_table(sid)
+            k = cache["k"][:, 0]      # [L, s, kv, hd]
+            v = cache["v"][:, 0]
+            for pi, page in enumerate(table):
+                lo = pi * self.page_size
+                hi = min(lo + self.page_size, n_cached)
+                self.k_pages = self.k_pages.at[:, page, : hi - lo].set(
+                    k[:, lo:hi])
+                self.v_pages = self.v_pages.at[:, page, : hi - lo].set(
+                    v[:, lo:hi])
+        self._tokens[sid] = prompt
+        return sid
+
+    # ------------------------------------------------------------------
+    # branch ops (the paper's lifecycle, KV domain)
+    # ------------------------------------------------------------------
+    def fork(self, seq: int, n: int) -> List[int]:
+        children = self.kv.fork(seq, n)
+        for c in children:
+            self._tokens[c] = list(self._tokens[seq])
+        return children
+
+    def commit(self, seq: int) -> int:
+        parent = self.kv.commit(seq)
+        self._tokens[parent] = self._tokens.pop(seq)
+        return parent
+
+    def abort(self, seq: int) -> None:
+        self.kv.abort(seq)
+        self._tokens.pop(seq, None)
+
+    # ------------------------------------------------------------------
+    def decode(self, seq_ids: Sequence[int], *, greedy: bool = True,
+               temperature: float = 1.0,
+               key: Optional[jax.Array] = None) -> List[int]:
+        """One token for each sequence (they decode as one batch)."""
+        lengths_before = np.array([self.kv.length(s) for s in seq_ids],
+                                  np.int32)
+        # host: reserve slots (may trigger CoW page copies)
+        slots = []
+        for s in seq_ids:
+            (slot,) = self.kv.prepare_append(s, 1)
+            for cow in slot.cow:
+                self.k_pages = _copy_pages(
+                    self.k_pages, jnp.int32(cow.src_page),
+                    jnp.int32(cow.dst_page))
+                self.v_pages = _copy_pages(
+                    self.v_pages, jnp.int32(cow.src_page),
+                    jnp.int32(cow.dst_page))
+            slots.append(slot)
+        bt, _ = self.kv.dense_block_tables(seq_ids, self.max_pages)
+        last_tokens = jnp.asarray(
+            [[self._tokens[s][-1]] for s in seq_ids], jnp.int32)
+
+        logits, self.k_pages, self.v_pages = paged_decode_step(
+            self.cfg, self.params, self.k_pages, self.v_pages,
+            jnp.asarray(bt), jnp.asarray(lengths_before),
+            jnp.asarray([sl.page for sl in slots], jnp.int32),
+            jnp.asarray([sl.offset for sl in slots], jnp.int32),
+            last_tokens, impl=self.attn_impl,
+        )
+        logits = logits[:, 0]
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1)
+        else:
+            assert key is not None
+            nxt = jax.random.categorical(key, logits / temperature)
+        out = [int(t) for t in np.asarray(nxt)]
+        for s, t in zip(seq_ids, out):
+            self._tokens[s].append(t)
+        return out
+
+    def tokens(self, seq: int) -> List[int]:
+        return list(self._tokens[seq])
+
+    def stats(self) -> Dict[str, int]:
+        return self.kv.stats()

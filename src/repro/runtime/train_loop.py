@@ -1,0 +1,122 @@
+"""Train-step builder: grad accumulation, clipping, gradient compression,
+donation-ready state layout.
+
+``build_train_step`` returns a pure function
+``step(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+``donate_argnums=(0,)`` under any ParallelPlan.  Distribution is by
+sharding propagation: batch comes in sharded over (pod, data), parameters
+over (data=FSDP, model=TP); XLA inserts all-gathers at weight use and
+reduce-scatters on gradients (verified in the dry-run HLO).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import (
+    Optimizer,
+    apply_updates,
+    clip_by_global_norm,
+    compressed_gradients,
+)
+from repro.optim.compress import ErrorFeedbackState, ef_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    ef: Optional[ErrorFeedbackState]  # gradient-compression residual
+    step: jax.Array
+
+
+def init_train_state(model: Model, optimizer: Optimizer, key: jax.Array,
+                     *, compress: Optional[str] = None) -> TrainState:
+    params = model.init(key)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        ef=ef_init(params) if compress else None,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def build_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    accum_steps: int = 1,
+    clip_norm: Optional[float] = 1.0,
+    compress: Optional[str] = None,
+    grad_shardings: Any = None,   # e.g. ZeRO pod-sharded fp32 accumulator
+) -> Callable[[TrainState, Dict[str, jax.Array]],
+              Tuple[TrainState, Dict[str, jax.Array]]]:
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # microbatch over a leading accum axis; grads accumulate in
+            # fp32 — compute/"comm" overlap comes from XLA pipelining the
+            # per-microbatch reduce-scatters against the next microbatch
+            def split(x):
+                b = x.shape[0]
+                assert b % accum_steps == 0, (b, accum_steps)
+                return x.reshape((accum_steps, b // accum_steps)
+                                 + x.shape[1:])
+
+            mb = {k: split(v) for k, v in batch.items()}
+
+            def constrain_grads(t):
+                if grad_shardings is None:
+                    return t
+                return jax.tree_util.tree_map(
+                    lambda x, s: jax.lax.with_sharding_constraint(x, s)
+                    if s is not None else x, t, grad_shardings)
+
+            def body(carry, mbatch):
+                acc, loss_acc = carry
+                (loss, _), g = grad_fn(state.params, mbatch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), acc, g)
+                return (constrain_grads(acc), loss_acc + loss), None
+
+            zeros = constrain_grads(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params))
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            loss = loss_sum / accum_steps
+            metrics = {"xent": loss, "moe_aux": jnp.float32(0)}
+
+        ef = state.ef
+        if compress and ef is not None:
+            # cross-pod gradient compression with error feedback: the
+            # reconstruction is exact math; the wire-volume saving enters
+            # the roofline collective term via compression_ratio()
+            grads, ef = compressed_gradients(grads, ef, method=compress)
+
+        gnorm = None
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gnorm if gnorm is not None else jnp.float32(0),
+            **{k: v for k, v in metrics.items()},
+        }
+        return TrainState(params=params, opt_state=opt_state, ef=ef,
+                          step=state.step + 1), out_metrics
+
+    return step

@@ -1,0 +1,248 @@
+"""BranchStore semantics: the paper's §3.3 core properties, in-memory."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BranchStateError,
+    BranchStatus,
+    BranchStore,
+    FrozenOriginError,
+    NoSuchLeafError,
+    StaleBranchError,
+    explore_threads,
+)
+
+
+@pytest.fixture
+def store():
+    return BranchStore({"a": 1, "b": 2, "dir/c": 3})
+
+
+def test_chain_resolution_reads_base(store):
+    (b,) = store.fork()
+    assert store.read(b, "a") == 1
+    assert store.read(b, "dir/c") == 3
+
+
+def test_write_is_cow_base_untouched(store):
+    (b,) = store.fork()
+    store.write(b, "a", 100)
+    assert store.read(b, "a") == 100
+    assert store.read(BranchStore.ROOT, "a") == 1  # frozen origin unchanged
+
+
+def test_sibling_isolation(store):
+    b1, b2 = store.fork(n=2)
+    store.write(b1, "a", 10)
+    store.write(b2, "a", 20)
+    assert store.read(b1, "a") == 10
+    assert store.read(b2, "a") == 20
+
+
+def test_tombstone_hides_base_leaf(store):
+    (b,) = store.fork()
+    store.delete(b, "a")
+    with pytest.raises(NoSuchLeafError):
+        store.read(b, "a")
+    assert "a" not in store.listdir(b)
+    # base still has it
+    assert store.read(BranchStore.ROOT, "a") == 1
+
+
+def test_deleted_leaf_does_not_reappear_in_nested_branch(store):
+    (b,) = store.fork()
+    store.delete(b, "a")
+    (bb,) = store.fork(b)
+    with pytest.raises(NoSuchLeafError):
+        store.read(bb, "a")
+
+
+def test_delete_nonexistent_raises(store):
+    (b,) = store.fork()
+    with pytest.raises(NoSuchLeafError):
+        store.delete(b, "nope")
+
+
+def test_commit_applies_delta_to_parent(store):
+    (b,) = store.fork()
+    store.write(b, "a", 42)
+    store.delete(b, "b")
+    store.commit(b)
+    assert store.read(BranchStore.ROOT, "a") == 42
+    assert not store.exists(BranchStore.ROOT, "b")
+    assert store.status(b) is BranchStatus.COMMITTED
+
+
+def test_first_commit_wins_invalidates_siblings(store):
+    b1, b2, b3 = store.fork(n=3)
+    store.write(b1, "a", 10)
+    store.write(b2, "a", 20)
+    store.commit(b2)
+    assert store.read(BranchStore.ROOT, "a") == 20
+    # siblings are now stale: every op raises the -ESTALE analogue
+    with pytest.raises(StaleBranchError):
+        store.commit(b1)
+    with pytest.raises(StaleBranchError):
+        store.read(b3, "a")
+    with pytest.raises(StaleBranchError):
+        store.write(b3, "x", 1)
+    assert store.status(b1) is BranchStatus.STALE
+    assert store.status(b3) is BranchStatus.STALE
+
+
+def test_abort_leaves_siblings_valid(store):
+    b1, b2 = store.fork(n=2)
+    store.write(b1, "a", 10)
+    store.abort(b1)
+    assert store.status(b1) is BranchStatus.ABORTED
+    # sibling unaffected, can still commit
+    store.write(b2, "a", 20)
+    store.commit(b2)
+    assert store.read(BranchStore.ROOT, "a") == 20
+
+
+def test_abort_discards_delta(store):
+    (b,) = store.fork()
+    store.write(b, "a", 10)
+    store.abort(b)
+    assert store.read(BranchStore.ROOT, "a") == 1
+    with pytest.raises(BranchStateError):
+        store.write(b, "a", 11)
+
+
+def test_frozen_origin_rejects_writes(store):
+    (b,) = store.fork()
+    store.fork(b)  # b now has a live child
+    with pytest.raises(FrozenOriginError):
+        store.write(b, "a", 5)
+    with pytest.raises(FrozenOriginError):
+        store.delete(b, "a")
+
+
+def test_commit_with_live_children_rejected(store):
+    (b,) = store.fork()
+    store.fork(b)
+    with pytest.raises(BranchStateError):
+        store.commit(b)
+
+
+def test_nested_commit_propagates_one_level_only(store):
+    (b,) = store.fork()
+    (bb,) = store.fork(b)
+    store.write(bb, "a", 99)
+    store.commit(bb)
+    # visible in b, NOT yet in root (commit is to immediate parent, §5.2)
+    assert store.read(b, "a") == 99
+    assert store.read(BranchStore.ROOT, "a") == 1
+    store.commit(b)
+    assert store.read(BranchStore.ROOT, "a") == 99
+
+
+def test_nested_sibling_invalidation_is_local(store):
+    b1, b2 = store.fork(n=2)
+    c1, c2 = store.fork(b1, n=2)
+    store.write(c1, "a", 7)
+    store.commit(c1)
+    # c2 stale, but b2 (uncle) unaffected
+    assert store.status(c2) is BranchStatus.STALE
+    assert store.status(b2) is BranchStatus.ACTIVE
+
+
+def test_parent_commit_invalidates_descendants_of_siblings(store):
+    b1, b2 = store.fork(n=2)
+    (c,) = store.fork(b2)  # grandchild under the losing branch
+    store.write(b1, "a", 5)
+    store.commit(b1)
+    assert store.status(b2) is BranchStatus.STALE
+    assert store.status(c) is BranchStatus.STALE
+
+
+def test_fork_is_o1_delta_empty(store):
+    for n_extra in (10, 1000):
+        big = BranchStore({f"k{i}": i for i in range(n_extra)})
+        (b,) = big.fork()
+        assert big.delta_size(b) == 0  # creation cost independent of base
+
+
+def test_listdir_union_minus_tombstones(store):
+    (b,) = store.fork()
+    store.write(b, "new", 1)
+    store.delete(b, "b")
+    assert store.listdir(b) == ["a", "dir/c", "new"]
+
+
+def test_consolidated_view_matches_reads(store):
+    (b,) = store.fork()
+    store.write(b, "a", 10)
+    store.delete(b, "b")
+    (bb,) = store.fork(b)
+    store.write(bb, "z", 9)
+    view = store.consolidated_view(bb)
+    assert view == {"a": 10, "dir/c": 3, "z": 9}
+
+
+def test_pytree_snapshot_restore(store):
+    tree = {"w": np.ones((4, 4)), "opt": {"mu": np.zeros(3)}}
+    (b,) = store.fork()
+    store.snapshot_pytree(b, tree, prefix="step0")
+    out = store.restore_pytree(b, tree, prefix="step0")
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    np.testing.assert_array_equal(out["opt"]["mu"], tree["opt"]["mu"])
+
+
+def test_explore_threads_single_winner(store):
+    hits = []
+
+    def make_fn(i, ok):
+        def fn(bid):
+            store.write(bid, "result", i)
+            hits.append(i)
+            return ok
+
+        return fn
+
+    winner, statuses = explore_threads(
+        store, BranchStore.ROOT, [make_fn(0, True), make_fn(1, True),
+                                  make_fn(2, True)]
+    )
+    assert winner is not None
+    committed = [s for s in statuses if s is BranchStatus.COMMITTED]
+    assert len(committed) == 1  # exactly one winner
+    assert store.read(BranchStore.ROOT, "result") in (0, 1, 2)
+
+
+def test_explore_threads_all_abort_parent_resumes(store):
+    winner, statuses = explore_threads(
+        store, BranchStore.ROOT, [lambda b: False, lambda b: False]
+    )
+    assert winner is None
+    assert all(s is BranchStatus.ABORTED for s in statuses)
+    assert store.read(BranchStore.ROOT, "a") == 1  # parent resumed intact
+
+
+def test_concurrent_commit_race_exactly_one_winner(store):
+    n = 8
+    branches = store.fork(n=n)
+    results = [None] * n
+    barrier = threading.Barrier(n)
+
+    def racer(i, bid):
+        store.write(bid, "winner", i)
+        barrier.wait()
+        try:
+            store.commit(bid)
+            results[i] = "won"
+        except StaleBranchError:
+            results[i] = "stale"
+
+    ts = [threading.Thread(target=racer, args=(i, b))
+          for i, b in enumerate(branches)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert results.count("won") == 1
+    assert results.count("stale") == n - 1

@@ -1,0 +1,136 @@
+"""BranchFS (on-disk) semantics + CLI + chunkstore refcounting."""
+
+import pytest
+
+from repro.core.errors import (
+    BranchStateError,
+    FrozenOriginError,
+    NoSuchLeafError,
+    StaleBranchError,
+)
+from repro.fs import BranchFS, ChunkStore
+from repro.fs.cli import main as cli_main
+
+
+@pytest.fixture
+def fs(tmp_path):
+    fs = BranchFS(tmp_path / "ws")
+    fs.write("base", "main.py", b"print('hello')")
+    fs.write("base", "lib/util.py", b"def f(): pass")
+    return fs
+
+
+def test_create_and_chain_read(fs):
+    (b,) = fs.create()
+    assert fs.read(b, "main.py") == b"print('hello')"
+
+
+def test_cow_write_isolates_base(fs):
+    (b,) = fs.create()
+    fs.write(b, "main.py", b"print('patched')")
+    assert fs.read(b, "main.py") == b"print('patched')"
+    assert fs.read("base", "main.py") == b"print('hello')"
+
+
+def test_at_branch_paths(fs):
+    fs.create(name="feature-a")
+    fs.write("base", "@feature-a/new.txt", b"x")  # @path overrides branch arg
+    assert fs.read("base", "@feature-a/new.txt") == b"x"
+    assert not fs.exists("base", "new.txt")
+
+
+def test_tombstones(fs):
+    (b,) = fs.create()
+    fs.delete(b, "main.py")
+    with pytest.raises(NoSuchLeafError):
+        fs.read(b, "main.py")
+    assert "main.py" not in fs.listdir(b)
+    assert fs.read("base", "main.py") == b"print('hello')"
+
+
+def test_commit_to_parent_and_sibling_invalidation(fs):
+    b1, b2 = fs.create(n=2)
+    fs.write(b1, "main.py", b"v1")
+    fs.write(b2, "main.py", b"v2")
+    fs.commit(b1)
+    assert fs.read("base", "main.py") == b"v1"
+    assert fs.status(b2) == "stale"
+    with pytest.raises(StaleBranchError):
+        fs.commit(b2)
+
+
+def test_nested_commit_one_level(fs):
+    (b,) = fs.create()
+    (bb,) = fs.create(parent=b)
+    fs.write(bb, "deep.txt", b"d")
+    fs.commit(bb)
+    assert fs.read(b, "deep.txt") == b"d"
+    assert not fs.exists("base", "deep.txt")
+    fs.commit(b)
+    assert fs.read("base", "deep.txt") == b"d"
+
+
+def test_abort_recycles_chunks(fs):
+    (b,) = fs.create()
+    fs.write(b, "junk.bin", b"Z" * 1024)
+    before = fs.chunks.stats()["chunks"]
+    fs.abort(b)
+    assert fs.chunks.stats()["chunks"] == before - 1
+    assert fs.status(b) == "aborted"
+
+
+def test_frozen_origin_on_disk(fs):
+    (b,) = fs.create()
+    fs.create(parent=b)
+    with pytest.raises(FrozenOriginError):
+        fs.write(b, "x", b"1")
+
+
+def test_persistence_across_reopen(fs, tmp_path):
+    (b,) = fs.create(name="persist")
+    fs.write(b, "main.py", b"v2")
+    fs.commit(b)
+    fs2 = BranchFS(tmp_path / "ws")
+    assert fs2.read("base", "main.py") == b"v2"
+    assert fs2.status("persist") == "committed"
+
+
+def test_identical_content_stored_once(fs):
+    (b,) = fs.create()
+    before = fs.chunks.stats()["chunks"]
+    fs.write(b, "copy1.bin", b"same-bytes")
+    fs.write(b, "copy2.bin", b"same-bytes")
+    assert fs.chunks.stats()["chunks"] == before + 1  # content-addressed
+
+
+def test_base_commit_into_base_is_error(fs):
+    with pytest.raises(BranchStateError):
+        fs.commit("base")
+
+
+def test_chunkstore_refcount_gc(tmp_path):
+    cs = ChunkStore(tmp_path / "cs")
+    cid = cs.put(b"hello")
+    assert cs.refcount(cid) == 1
+    cs.incref([cid])
+    assert cs.refcount(cid) == 2
+    cs.decref([cid])
+    assert cs.exists(cid)
+    cs.decref([cid])
+    assert not cs.exists(cid)  # GC'd at zero
+
+
+def test_cli_roundtrip(tmp_path, capsys):
+    root = str(tmp_path / "cliws")
+    cli_main(["--root", root, "init"])
+    cli_main(["--root", root, "write", "--branch", "base",
+              "--path", "f.txt", "--data", "orig"])
+    cli_main(["--root", root, "create", "--parent", "base",
+              "--name", "fix"])
+    cli_main(["--root", root, "write", "--branch", "fix",
+              "--path", "f.txt", "--data", "patched"])
+    cli_main(["--root", root, "commit", "--branch", "fix"])
+    capsys.readouterr()
+    cli_main(["--root", root, "read", "--branch", "base",
+              "--path", "f.txt"])
+    assert capsys.readouterr().out == "patched"

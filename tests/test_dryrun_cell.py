@@ -1,0 +1,78 @@
+"""Integration: one real dry-run cell end-to-end in a subprocess
+(512 placeholder devices, production mesh, JSON record)."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_dryrun_cell_qwen2_decode(tmp_path):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen2-1.5b", "--shape", "decode_32k", "--mesh", "single",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=1200,
+        cwd=str(REPO),
+    )
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-4000:]}"
+    assert "memory_analysis" in r.stdout
+    rec = json.loads(
+        (tmp_path / "qwen2-1.5b_decode_32k_single.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["hlo_flops"] > 0
+    assert rec["t_memory_s"] > 0
+    assert rec["bottleneck"] in ("compute", "memory", "collective")
+    # decode must be memory-dominated (reads all KV + params per token)
+    assert rec["t_memory_s"] > rec["t_compute_s"]
+
+
+def test_cell_applicability_rules():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, cell_applicable
+
+    ok, _ = cell_applicable(get_config("mamba2-2.7b"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = cell_applicable(get_config("zamba2-7b"), SHAPES["long_500k"])
+    assert ok
+    ok, reason = cell_applicable(get_config("granite-8b"),
+                                 SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in reason
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        for arch in ("granite-8b", "qwen3-moe-235b-a22b", "mamba2-2.7b"):
+            ok, _ = cell_applicable(get_config(arch), SHAPES[shape])
+            assert ok
+
+
+def test_input_specs_shapes():
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, input_specs
+
+    cfg = get_config("granite-8b")
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert tr["tokens"].shape == (256, 4096)
+    assert tr["tokens"].dtype == jnp.int32
+    de = input_specs(cfg, SHAPES["decode_32k"])
+    assert de["tokens"].shape == (128, 1)
+    assert de["cache"]["k"].shape == (36, 128, 32768, 8, 128)
+    assert de["pos"].shape == (128,)
+
+    mg = input_specs(get_config("musicgen-medium"), SHAPES["train_4k"])
+    assert mg["tokens"].shape == (256, 4096, 4)
+
+    px = input_specs(get_config("pixtral-12b"), SHAPES["train_4k"])
+    assert px["frontend_embed"].shape == (256, 1024, 5120)
+
+    mb = input_specs(get_config("mamba2-2.7b"), SHAPES["long_500k"])
+    assert "k" not in mb["cache"]          # attention-free
+    assert mb["cache"]["ssm"].shape == (64, 1, 80, 128, 64)

@@ -1,0 +1,54 @@
+"""Examples must actually run (smoke scale)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+ENV = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+
+
+def run_example(args, timeout=900):
+    r = subprocess.run([sys.executable] + args, capture_output=True,
+                       text=True, env=ENV, timeout=timeout,
+                       cwd=str(REPO))
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def test_quickstart():
+    out = run_example(["examples/quickstart.py"])
+    assert "quickstart complete" in out
+    assert "-ESTALE" in out
+
+
+def test_agentic_serve():
+    out = run_example(["examples/agentic_serve.py"])
+    assert "committing branch" in out
+    assert "final sequence" in out
+
+
+def test_speculative_train():
+    out = run_example(["examples/speculative_train.py"])
+    assert "speculative training complete" in out
+
+
+def test_train_100m_smoke():
+    out = run_example(["examples/train_100m.py", "--smoke"])
+    assert "->" in out  # loss improved line printed (assert inside)
+
+
+def test_serve_entry_point():
+    out = run_example(["-m", "repro.launch.serve", "--arch",
+                       "paper-agentic", "--branches", "2", "--tokens",
+                       "3", "--requests", "1"])
+    assert "request 0" in out
+
+
+def test_train_entry_point_smoke():
+    out = run_example(["-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+                       "--smoke"])
+    assert "done:" in out

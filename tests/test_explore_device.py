@@ -1,0 +1,116 @@
+"""Device-side exploration: first-commit-wins as a jit-compatible reduction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    explore,
+    first_commit_wins,
+    fork_stacked,
+    perturbed_fork,
+    select_branch,
+)
+
+
+def test_fork_stacked_shapes():
+    state = {"w": jnp.ones((3, 4)), "step": jnp.int32(7)}
+    forked = fork_stacked(state, 5)
+    assert forked["w"].shape == (5, 3, 4)
+    assert forked["step"].shape == (5,)
+    np.testing.assert_array_equal(forked["w"][2], state["w"])
+
+
+def test_first_commit_wins_earliest_success():
+    success = jnp.array([False, True, True, False])
+    t = jnp.array([0.1, 0.5, 0.2, 0.0])
+    winner, any_ok = first_commit_wins(success, t)
+    assert int(winner) == 2  # earliest successful commit time
+    assert bool(any_ok)
+
+
+def test_first_commit_wins_index_tiebreak():
+    success = jnp.array([False, True, True])
+    winner, any_ok = first_commit_wins(success)  # default time = index
+    assert int(winner) == 1  # lowest index among successes = "first"
+    assert bool(any_ok)
+
+
+def test_first_commit_wins_no_success():
+    success = jnp.zeros((4,), dtype=bool)
+    winner, any_ok = first_commit_wins(success)
+    assert not bool(any_ok)
+
+
+def test_select_branch_dynamic_index():
+    stacked = {"a": jnp.arange(12).reshape(3, 4)}
+    out = jax.jit(select_branch)(stacked, jnp.int32(2))
+    np.testing.assert_array_equal(out["a"], np.arange(8, 12))
+
+
+def test_explore_commits_winner_under_jit():
+    origin = {"x": jnp.zeros((2,)), "loss": jnp.float32(100.0)}
+
+    def step(state, key):
+        # each branch proposes x = branch noise; success if loss improves
+        noise = jax.random.normal(key, (2,))
+        new_loss = jnp.sum(noise**2)
+        new = {"x": noise, "loss": new_loss}
+        return new, new_loss < state["loss"], new_loss
+
+    result = jax.jit(
+        lambda o, k: explore(step, o, 4, k,
+                             commit_time_fn=lambda aux: aux)
+    )(origin, jax.random.PRNGKey(0))
+    assert bool(result.committed)
+    # winner is the branch with the smallest loss (earliest "commit time")
+    losses = np.asarray(result.aux)
+    assert int(result.winner) == int(np.argmin(losses))
+    np.testing.assert_allclose(float(result.state["loss"]),
+                               losses.min(), rtol=1e-6)
+
+
+def test_explore_no_winner_keeps_origin():
+    origin = {"x": jnp.full((2,), 5.0)}
+
+    def step(state, key):
+        return {"x": state["x"] + 1}, jnp.bool_(False), jnp.float32(0)
+
+    result = explore(step, origin, 3, jax.random.PRNGKey(1))
+    assert not bool(result.committed)
+    np.testing.assert_array_equal(result.state["x"], origin["x"])
+
+
+def test_perturbed_fork_distinct_branches():
+    state = {"lr": jnp.float32(1.0)}
+
+    def perturb(s, key, i):
+        return {"lr": s["lr"] * (2.0 ** i.astype(jnp.float32))}
+
+    forked = perturbed_fork(state, 3, perturb, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(forked["lr"]), [1.0, 2.0, 4.0])
+
+
+def test_explore_gradient_descent_converges():
+    """End-to-end: exploration as a training primitive (speculative steps)."""
+
+    def loss_fn(x):
+        return jnp.sum((x - 3.0) ** 2)
+
+    origin = {"x": jnp.zeros((4,))}
+
+    def step(state, key):
+        g = jax.grad(lambda x: loss_fn(x))(state["x"])
+        lr = 0.1 + 0.2 * jax.random.uniform(key)  # each branch tries an LR
+        new_x = state["x"] - lr * g
+        improved = loss_fn(new_x) < loss_fn(state["x"])
+        return {"x": new_x}, improved, loss_fn(new_x)
+
+    state = origin
+    key = jax.random.PRNGKey(42)
+    for i in range(25):
+        key, k = jax.random.split(key)
+        res = explore(step, state, 4, k, commit_time_fn=lambda a: a)
+        state = res.state
+    assert float(loss_fn(state["x"])) < 1e-3

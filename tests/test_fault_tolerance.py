@@ -1,0 +1,105 @@
+"""Fault tolerance: NaN rollback, checkpoint/restart, straggler racing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.core.store import BranchStatus
+from repro.data import SyntheticLMPipeline
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.runtime.fault import FaultTolerantTrainer
+from repro.runtime.train_loop import build_train_step, init_train_state
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_config("qwen2-1.5b")),
+                              dtype="float32")
+    model = Model(cfg, attn_chunk=8, loss_chunk=8, remat=False)
+    opt = adamw(1e-3)
+    step = jax.jit(build_train_step(model, opt))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    return cfg, model, opt, step, state
+
+
+def make_trainer(setup, tmp_path=None, **kw):
+    cfg, model, opt, step, state = setup
+    data = SyntheticLMPipeline(cfg, batch=2, seq=16, seed=3)
+    ckpt = CheckpointManager(tmp_path / "ckpt") if tmp_path else None
+    return FaultTolerantTrainer(step_fn=step, state=state, data=data,
+                                ckpt=ckpt, **kw)
+
+
+def test_loss_decreases(setup):
+    tr = make_trainer(setup)
+    log = tr.run(12)
+    assert len(log) == 12
+    assert log[-1]["loss"] < log[0]["loss"]
+
+
+def test_nan_rollback_skips_bad_step(setup):
+    tr = make_trainer(setup, corrupt_loss_at=3)
+    tr.run(8)
+    assert tr.rollbacks == 1
+    assert len(tr.metrics_log) == 7          # one step rolled back
+    # training continued from the committed state: all later losses finite
+    assert all(np.isfinite(m["loss"]) for m in tr.metrics_log)
+    # committed state advanced past the fault
+    assert int(tr.committed_state.step) == 7
+
+
+def test_checkpoint_restart_resumes_exact_stream(setup, tmp_path):
+    cfg, model, opt, step, state = setup
+    tr = make_trainer(setup, tmp_path, ckpt_every=5)
+    tr.run(10)
+    losses_first = [m["loss"] for m in tr.metrics_log]
+
+    # simulate a crash: rebuild everything from the checkpoint
+    data2 = SyntheticLMPipeline(cfg, batch=2, seq=16, seed=3)
+    tr2 = FaultTolerantTrainer.restore(
+        step, state, data2, CheckpointManager(tmp_path / "ckpt"))
+    assert int(tr2.state.step) == 10
+    assert tr2.data.state().step == 10      # data cursor replayed
+    tr2.run(3)
+    # a parallel uninterrupted run must produce identical losses
+    tr3 = make_trainer(setup)
+    tr3.run(13)
+    ref = [m["loss"] for m in tr3.metrics_log][10:]
+    got = [m["loss"] for m in tr2.metrics_log]
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+def test_straggler_speculation_first_commit_wins(setup):
+    tr = make_trainer(setup)
+    # warm the jit cache so compute time ≪ straggler delay
+    tr.run(1)
+    res = tr.speculative_step(n_replicas=3, delays=[2.0, 0.0, 2.0])
+    assert res["outcomes"].count("committed") == 1
+    # the fast replica (index 1) wins; stragglers observe -ESTALE
+    assert res["outcomes"][1] == "committed"
+    assert res["outcomes"].count("stale") == 2
+    assert res["statuses"].count(BranchStatus.COMMITTED) == 1
+
+
+def test_straggler_speculation_with_dead_executor(setup):
+    tr = make_trainer(setup)
+    res = tr.speculative_step(n_replicas=2, delays=[0.0, 0.0],
+                              kill=[True, False])
+    assert res["outcomes"][0] == "killed"
+    assert res["outcomes"][1] == "committed"
+    # the dead executor's branch was invalidated by the winner's commit
+    assert res["statuses"][0] is BranchStatus.STALE
+
+
+def test_speculation_then_training_continues(setup):
+    tr = make_trainer(setup)
+    tr.run(2)
+    tr.speculative_step(n_replicas=2, delays=[0.05, 0.0])
+    tr.run(2)
+    assert int(tr.committed_state.step) == 5

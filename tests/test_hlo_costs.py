@@ -1,0 +1,91 @@
+"""Unit tests for the trip-count-aware HLO cost parser."""
+
+import textwrap
+
+import pytest
+
+from repro.launch.hlo_costs import analyze_hlo, parse_hlo
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body (param: (s32[], f32[32,256], f32[6,256,256])) -> (s32[], f32[32,256], f32[6,256,256]) {
+      %param = (s32[], f32[32,256], f32[6,256,256]) parameter(0)
+      %gte.0 = s32[] get-tuple-element(%param), index=0
+      %gte.1 = f32[32,256]{1,0} get-tuple-element(%param), index=1
+      %gte.2 = f32[6,256,256]{2,1,0} get-tuple-element(%param), index=2
+      %ds = f32[1,256,256]{2,1,0} dynamic-slice(%gte.2, %gte.0), dynamic_slice_sizes={1,256,256}
+      %w = f32[256,256]{1,0} reshape(%ds)
+      %ag = f32[256,256]{1,0} all-gather(%w), channel_id=1, dimensions={0}
+      %dot = f32[32,256]{1,0} dot(%gte.1, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %c1 = s32[] constant(1)
+      %add = s32[] add(%gte.0, %c1)
+      ROOT %tup = (s32[], f32[32,256], f32[6,256,256]) tuple(%add, %dot, %gte.2)
+    }
+
+    %cond (p: (s32[], f32[32,256], f32[6,256,256])) -> pred[] {
+      %p = (s32[], f32[32,256], f32[6,256,256]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(6)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[32,256], w: f32[6,256,256]) -> f32[32,256] {
+      %a = f32[32,256]{1,0} parameter(0)
+      %w = f32[6,256,256]{2,1,0} parameter(1)
+      %c0 = s32[] constant(0)
+      %t = (s32[], f32[32,256], f32[6,256,256]) tuple(%c0, %a, %w)
+      %loop = (s32[], f32[32,256], f32[6,256,256]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"6"}}
+      ROOT %out = f32[32,256]{1,0} get-tuple-element(%loop), index=1
+    }
+""")
+
+
+def test_parse_computations():
+    comps = parse_hlo(HLO)
+    assert "body" in comps and "cond" in comps and "main" in comps
+    assert comps["__entry__"].name == "main"
+
+
+def test_flops_multiplied_by_trip_count():
+    cost = analyze_hlo(HLO)
+    # dot: [32,256]x[256,256] = 2*32*256*256 flops, x6 trips
+    assert cost.flops == pytest.approx(2 * 32 * 256 * 256 * 6)
+    assert cost.dot_count == 6
+
+
+def test_collectives_multiplied_by_trip_count():
+    cost = analyze_hlo(HLO)
+    # all-gather output 256*256*4 bytes, x6 trips
+    assert cost.coll_bytes_by_op["all-gather"] == 256 * 256 * 4 * 6
+    assert cost.coll_count_by_op["all-gather"] == 6
+
+
+def test_bytes_model_free_and_sliced_ops():
+    cost = analyze_hlo(HLO)
+    # dynamic-slice counted as 2x its OUTPUT (one layer slice), not the
+    # whole stacked weights, per trip
+    ds_bytes = 2 * (256 * 256 * 4)
+    # dot: out + both operands = 3 * 32*256? no: out 32*256 + a 32*256 +
+    # w 256*256
+    dot_bytes = (32 * 256 + 32 * 256 + 256 * 256) * 4
+    assert cost.bytes_accessed >= (ds_bytes + dot_bytes) * 6
+    # tuples/get-tuple-element are free: a naive model that charges the
+    # full [6,256,256] stacked-weights carry on every iteration would add
+    # ≥ 6·256·256·4 × 6 trips ≈ 9.4 MB on top of the real traffic; the
+    # total must stay below real-traffic + one carry's worth
+    real = (ds_bytes + dot_bytes + 3 * 256 * 256 * 4) * 6  # ds+dot+ag
+    carry_once = 6 * 256 * 256 * 4 + 2 * 32 * 256 * 4
+    assert cost.bytes_accessed < real + 2 * carry_once
+
+
+def test_vmem_tagging():
+    tagged = HLO.replace(
+        "%dot = f32[32,256]{1,0} dot(%gte.1, %ag), "
+        "lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        "%dot = f32[32,256]{1,0} dot(%gte.1, %ag), "
+        "lhs_contracting_dims={1}, rhs_contracting_dims={0}, "
+        'metadata={op_name="jit(f)/vmem_resident/dot_general"}')
+    cost = analyze_hlo(tagged)
+    assert cost.bytes_vmem_tagged > 0
+    assert cost.bytes_vmem_tagged < cost.bytes_accessed

@@ -1,0 +1,176 @@
+"""KVBranchManager: CoW page tables, refcounts, fork/commit/abort."""
+
+import numpy as np
+import pytest
+
+from repro.core import KVBranchManager, SeqStatus, StaleBranchError
+from repro.core.errors import BranchStateError, FrozenOriginError
+
+
+@pytest.fixture
+def kv():
+    return KVBranchManager(num_pages=64, page_size=4)
+
+
+def fill(kv, sid, n):
+    return [kv.prepare_append(sid)[0] for _ in range(n)]
+
+
+def test_new_seq_allocates_ceil_pages(kv):
+    sid = kv.new_seq(length=9)  # 9 tokens, page=4 -> 3 pages
+    assert len(kv.block_table(sid)) == 3
+    assert kv.free_pages == 64 - 3
+
+
+def test_append_fills_pages_in_order(kv):
+    sid = kv.new_seq()
+    slots = fill(kv, sid, 6)
+    assert [s.offset for s in slots] == [0, 1, 2, 3, 0, 1]
+    assert len(kv.block_table(sid)) == 2
+
+
+def test_fork_shares_pages_zero_copy(kv):
+    sid = kv.new_seq(length=8)
+    free_before = kv.free_pages
+    c1, c2 = kv.fork(sid, n=2)
+    assert kv.free_pages == free_before  # no page allocated by fork
+    assert kv.block_table(c1) == kv.block_table(sid)
+    for p in kv.block_table(sid):
+        assert kv.refcount(p) == 3  # parent + 2 children
+
+
+def test_parent_frozen_while_children_live(kv):
+    sid = kv.new_seq(length=4)
+    kv.fork(sid, n=2)
+    with pytest.raises(FrozenOriginError):
+        kv.prepare_append(sid)
+
+
+def test_cow_on_shared_tail_page(kv):
+    sid = kv.new_seq()
+    fill(kv, sid, 6)  # page0 full, page1 has 2 tokens
+    tail = kv.block_table(sid)[-1]
+    c1, c2 = kv.fork(sid, n=2)
+    # first append on c1 must CoW the shared tail page
+    (slot,) = kv.prepare_append(c1)
+    assert slot.cow, "expected a CoW page copy"
+    assert slot.cow[0].src_page == tail
+    assert kv.block_table(c1)[-1] == slot.cow[0].dst_page != tail
+    assert slot.offset == 2
+    # sibling and parent tables untouched
+    assert kv.block_table(c2)[-1] == tail
+    assert kv.block_table(sid)[-1] == tail
+    # full pages stay shared (prefix sharing)
+    assert kv.refcount(kv.block_table(sid)[0]) == 3
+
+
+def test_page_aligned_fork_appends_without_cow(kv):
+    sid = kv.new_seq()
+    fill(kv, sid, 4)  # exactly one full page
+    (c,) = kv.fork(sid)
+    (slot,) = kv.prepare_append(c)
+    assert not slot.cow  # new page, no copy needed
+    assert slot.offset == 0
+
+
+def test_commit_promotes_table_and_invalidates_siblings(kv):
+    sid = kv.new_seq()
+    fill(kv, sid, 4)
+    c1, c2 = kv.fork(sid, n=2)
+    fill(kv, c1, 3)
+    parent = kv.commit(c1)
+    assert parent == sid
+    assert kv.length(sid) == 7
+    assert not kv.is_live(c2)
+    with pytest.raises(StaleBranchError):
+        kv.prepare_append(c2)
+    # parent resumes active and appendable
+    assert kv.is_live(sid)
+    kv.prepare_append(sid)
+
+
+def test_commit_recycles_sibling_pages(kv):
+    sid = kv.new_seq()
+    fill(kv, sid, 4)
+    c1, c2, c3 = kv.fork(sid, n=3)
+    fill(kv, c1, 5)  # c1 allocates 2 pages (CoW? no: tail full -> fresh)
+    fill(kv, c2, 9)
+    fill(kv, c3, 1)
+    used_before = kv.num_pages - kv.free_pages
+    kv.commit(c1)
+    used_after = kv.num_pages - kv.free_pages
+    assert used_after < used_before  # losers' private pages recycled
+    # exactly the winner chain remains: parent table pages all refcount 1
+    for p in kv.block_table(sid):
+        assert kv.refcount(p) == 1
+
+
+def test_abort_frees_private_pages_keeps_shared(kv):
+    sid = kv.new_seq()
+    fill(kv, sid, 4)
+    c1, c2 = kv.fork(sid, n=2)
+    fill(kv, c1, 5)
+    kv.abort(c1)
+    assert not kv.is_live(c1)
+    assert kv.is_live(c2)
+    assert kv.refcount(kv.block_table(sid)[0]) == 2  # parent + c2
+    # parent still frozen (c2 alive)
+    with pytest.raises(FrozenOriginError):
+        kv.prepare_append(sid)
+    kv.abort(c2)
+    # all children resolved -> parent resumes
+    kv.prepare_append(sid)
+
+
+def test_nested_fork_commit(kv):
+    sid = kv.new_seq()
+    fill(kv, sid, 4)
+    (c,) = kv.fork(sid)
+    fill(kv, c, 2)
+    g1, g2 = kv.fork(c, n=2)
+    fill(kv, g1, 1)
+    kv.commit(g1)  # commits into c only
+    assert kv.length(c) == 7
+    assert kv.length(sid) == 4
+    assert not kv.is_live(g2)
+    kv.commit(c)
+    assert kv.length(sid) == 7
+
+
+def test_commit_with_live_children_rejected(kv):
+    sid = kv.new_seq(length=4)
+    (c,) = kv.fork(sid)
+    kv.fork(c, n=2)
+    with pytest.raises(BranchStateError):
+        kv.commit(c)
+
+
+def test_pool_exhaustion_is_enospc(kv):
+    sid = kv.new_seq(length=64 * 4)  # exactly the pool
+    with pytest.raises(MemoryError):
+        kv.prepare_append(sid)  # needs a 65th page
+
+
+def test_dense_block_tables_padding(kv):
+    s1 = kv.new_seq(length=5)
+    s2 = kv.new_seq(length=1)
+    bt, lens = kv.dense_block_tables([s1, s2], max_pages=4)
+    assert bt.shape == (2, 4)
+    assert lens.tolist() == [5, 1]
+    assert bt[0, :2].tolist() == kv.block_table(s1)
+    assert (bt[1, 1:] == 0).all()
+
+
+def test_release_frees_everything(kv):
+    sid = kv.new_seq(length=16)
+    kv.release(sid)
+    assert kv.free_pages == 64
+    assert not kv.is_live(sid)
+
+
+def test_stats(kv):
+    sid = kv.new_seq(length=8)
+    kv.fork(sid, n=2)
+    st = kv.stats()
+    assert st["pages_shared"] == 2
+    assert st["sequences_live"] == 3

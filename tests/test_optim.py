@@ -1,0 +1,121 @@
+"""Optimizers, schedules, clipping, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    compressed_gradients,
+    cosine_warmup,
+    global_norm,
+    int8_compress,
+    int8_decompress,
+    linear_warmup,
+    sgd_momentum,
+)
+from repro.optim.compress import ef_init, topk_compress, topk_decompress
+
+
+def quad_setup():
+    params = {"w": jnp.array([3.0, -2.0, 1.0]), "b": jnp.array([0.5])}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("opt", [adamw(1e-1, weight_decay=0.0),
+                                 sgd_momentum(5e-2)])
+def test_optimizers_converge_on_quadratic(opt):
+    params, loss = quad_setup()
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks_params():
+    params = {"w": jnp.ones((4,))}
+    opt = adamw(1e-2, weight_decay=0.5)
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros((4,))}
+    for _ in range(50):
+        updates, state = opt.update(zero_g, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_adamw_bf16_params_fp32_moments():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw(1e-2)
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 0.1, jnp.bfloat16)}
+    updates, state = opt.update(g, state, params)
+    new = apply_updates(params, updates)
+    assert new["w"].dtype == jnp.bfloat16
+
+
+def test_schedules():
+    lw = linear_warmup(1.0, 10)
+    assert float(lw(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(lw(jnp.int32(100))) == pytest.approx(1.0)
+    cw = cosine_warmup(1.0, 10, 110, final_frac=0.1)
+    assert float(cw(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(cw(jnp.int32(110))) == pytest.approx(0.1, abs=1e-5)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # below the bound: untouched
+    small = {"a": jnp.full((4,), 0.01)}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(small["a"]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=32))
+def test_int8_roundtrip_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = int8_compress(x)
+    recon = int8_decompress(q, scale)
+    # error bounded by half a quantization bucket
+    assert float(jnp.abs(recon - x).max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0], jnp.float32)
+    vals, idx = topk_compress(x, frac=0.5)
+    recon = topk_decompress(vals, idx, x.shape)
+    np.testing.assert_allclose(np.asarray(recon),
+                               [0.0, -5.0, 0.0, 3.0])
+
+
+def test_error_feedback_preserves_signal():
+    """With EF, repeated compression of a constant gradient transmits the
+    full magnitude over time (sum of recon ≈ n·g)."""
+    g = {"w": jnp.asarray([1e-4, 1.0], jnp.float32)}  # tiny + large entry
+    ef = ef_init(g)
+    total = jnp.zeros((2,))
+    n = 200
+    for _ in range(n):
+        recon, ef = compressed_gradients(g, ef, method="int8")
+        total = total + recon["w"]
+    # EF bound: |avg - g| <= quantization bucket / n  (bucket = max|g|/127)
+    bucket = float(jnp.abs(g["w"]).max()) / 127.0
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g["w"]),
+                               rtol=0.05, atol=1.5 * bucket / n)

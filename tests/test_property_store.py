@@ -1,0 +1,309 @@
+"""Property-based tests: BranchStore and BranchFS vs. a reference model.
+
+The reference model is the obvious semantics: each branch is a full dict
+snapshot; fork copies the dict; commit overwrites the parent dict and
+marks siblings stale.  Any divergence between the CoW chain-resolution
+implementations and this model is a bug in the system's invariants.
+"""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import HealthCheck, given, settings
+
+from repro.core import BranchStatus, BranchStore
+from repro.core.errors import (
+    BranchError,
+    FrozenOriginError,
+    NoSuchLeafError,
+    StaleBranchError,
+)
+from repro.fs.branchfs import BranchFS
+
+# ---------------------------------------------------------------------------
+# reference model
+# ---------------------------------------------------------------------------
+
+
+class ModelStore:
+    """Snapshot-based oracle for branch-context semantics."""
+
+    def __init__(self, base):
+        self.snap = {0: dict(base)}
+        self.parent = {0: None}
+        self.children = {0: []}
+        self.status = {0: "active"}
+        self.next_id = 1
+
+    def _live_children(self, b):
+        return [c for c in self.children[b] if self.status[c] == "active"]
+
+    def fork(self, parent, n):
+        out = []
+        for _ in range(n):
+            b = self.next_id
+            self.next_id += 1
+            self.snap[b] = dict(self.snap[parent])
+            self.parent[b] = parent
+            self.children[b] = []
+            self.children[parent].append(b)
+            self.status[b] = "active"
+            out.append(b)
+        return out
+
+    def write(self, b, k, v):
+        assert self.status[b] == "active" and not self._live_children(b)
+        self.snap[b][k] = v
+
+    def delete(self, b, k):
+        assert self.status[b] == "active" and not self._live_children(b)
+        del self.snap[b][k]
+
+    def read(self, b, k):
+        return self.snap[b][k]
+
+    def listdir(self, b):
+        return sorted(self.snap[b])
+
+    def _kill_tree(self, b, status):
+        self.status[b] = status
+        for c in self.children[b]:
+            if self.status[c] == "active":
+                self._kill_tree(c, "stale")
+
+    def commit(self, b):
+        p = self.parent[b]
+        assert p is not None and self.status[b] == "active"
+        assert not self._live_children(b)
+        self.snap[p] = dict(self.snap[b])
+        self.status[b] = "committed"
+        for sib in self.children[p]:
+            if sib != b and self.status[sib] == "active":
+                self._kill_tree(sib, "stale")
+
+    def abort(self, b):
+        self._kill_tree(b, "aborted")
+
+
+# ---------------------------------------------------------------------------
+# operation sequences
+# ---------------------------------------------------------------------------
+
+KEYS = ["a", "b", "c", "d/e"]
+
+op_st = st.one_of(
+    st.tuples(st.just("fork"), st.integers(0, 5), st.integers(1, 3)),
+    st.tuples(st.just("write"), st.integers(0, 8), st.sampled_from(KEYS),
+              st.integers(0, 99)),
+    st.tuples(st.just("delete"), st.integers(0, 8), st.sampled_from(KEYS)),
+    st.tuples(st.just("commit"), st.integers(1, 8)),
+    st.tuples(st.just("abort"), st.integers(1, 8)),
+)
+
+
+def _run_pair(ops, make_impl, read_impl, enc=lambda v: v):
+    """Drive impl and model in lockstep; cross-check state after each op."""
+    base_raw = {"a": 0, "b": 1}
+    impl = make_impl({k: enc(v) for k, v in base_raw.items()})
+    model = ModelStore(base_raw)
+    impl_ids = {0: impl["root"]}
+
+    for op in ops:
+        kind = op[0]
+        if kind == "fork":
+            _, parent, n = op
+            if parent not in impl_ids or model.status.get(parent) != "active":
+                continue
+            if model._live_children(parent):
+                # forking an already-frozen parent is legal (adds siblings)
+                pass
+            new_model = model.fork(parent, n)
+            new_impl = impl["fork"](impl_ids[parent], n)
+            for m, i in zip(new_model, new_impl):
+                impl_ids[m] = i
+        elif kind == "write":
+            _, b, k, v = op
+            if b not in impl_ids:
+                continue
+            ok_model = (
+                model.status.get(b) == "active"
+                and not model._live_children(b)
+            )
+            try:
+                impl["write"](impl_ids[b], k, enc(v))
+                impl_ok = True
+            except BranchError:
+                impl_ok = False
+            assert impl_ok == ok_model, f"write divergence on {op}"
+            if ok_model:
+                model.write(b, k, v)
+        elif kind == "delete":
+            _, b, k = op
+            if b not in impl_ids:
+                continue
+            ok_model = (
+                model.status.get(b) == "active"
+                and not model._live_children(b)
+                and k in model.snap[b]
+            )
+            try:
+                impl["delete"](impl_ids[b], k)
+                impl_ok = True
+            except (BranchError, KeyError):
+                impl_ok = False
+            assert impl_ok == ok_model, f"delete divergence on {op}"
+            if ok_model:
+                model.delete(b, k)
+        elif kind == "commit":
+            _, b = op
+            if b not in impl_ids:
+                continue
+            ok_model = (
+                model.status.get(b) == "active"
+                and model.parent.get(b) is not None
+                and not model._live_children(b)
+            )
+            try:
+                impl["commit"](impl_ids[b])
+                impl_ok = True
+            except BranchError:
+                impl_ok = False
+            assert impl_ok == ok_model, f"commit divergence on {op}"
+            if ok_model:
+                model.commit(b)
+        elif kind == "abort":
+            _, b = op
+            if b not in impl_ids:
+                continue
+            ok_model = model.status.get(b) == "active"
+            try:
+                impl["abort"](impl_ids[b])
+                impl_ok = True
+            except BranchError:
+                impl_ok = False
+            # aborting stale branches is tolerated by impls (cleanup);
+            # only require agreement when the model says active
+            if ok_model:
+                assert impl_ok, f"abort divergence on {op}"
+                model.abort(b)
+
+        # invariant: every model-active branch reads identically
+        for mb, ib in impl_ids.items():
+            if model.status.get(mb) != "active":
+                continue
+            if model._live_children(mb):
+                continue  # frozen origins may differ on read-your-writes? no:
+                # reads are still allowed on frozen origins; check anyway
+            assert read_impl(impl, ib, "listdir") == model.listdir(mb), (
+                f"listdir divergence branch {mb} after {op}"
+            )
+            for k in model.listdir(mb):
+                assert read_impl(impl, ib, k) == enc(model.read(mb, k)), (
+                    f"read divergence branch {mb} key {k} after {op}"
+                )
+
+
+def _store_impl(base):
+    s = BranchStore(base)
+    return {
+        "root": BranchStore.ROOT,
+        "store": s,
+        "fork": lambda b, n: s.fork(b, n),
+        "write": lambda b, k, v: s.write(b, k, v),
+        "delete": lambda b, k: s.delete(b, k),
+        "commit": lambda b: s.commit(b),
+        "abort": lambda b: s.abort(b),
+    }
+
+
+def _store_read(impl, b, what):
+    s = impl["store"]
+    if what == "listdir":
+        return s.listdir(b)
+    return s.read(b, what)
+
+
+@settings(max_examples=200, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(op_st, max_size=24))
+def test_branch_store_matches_model(ops):
+    _run_pair(ops, _store_impl, _store_read)
+
+
+def _fs_impl_factory(tmp_path_factory):
+    counter = [0]
+
+    def make(base):
+        counter[0] += 1
+        fs = BranchFS(tmp_path_factory / f"ws{counter[0]}")
+        for k, v in base.items():
+            fs.write("base", k, v)
+        return {
+            "root": "base",
+            "fs": fs,
+            "fork": lambda b, n: fs.create(parent=b, n=n),
+            "write": lambda b, k, v: fs.write(b, k, v),
+            "delete": lambda b, k: fs.delete(b, k),
+            "commit": lambda b: fs.commit(b),
+            "abort": lambda b: fs.abort(b),
+        }
+
+    return make
+
+
+def _fs_read(impl, b, what):
+    fs = impl["fs"]
+    if what == "listdir":
+        return fs.listdir(b)
+    return fs.read(b, what)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(op_st, max_size=12))
+def test_branchfs_matches_model(ops):
+    import tempfile
+    from pathlib import Path
+
+    with tempfile.TemporaryDirectory() as td:
+        _run_pair(
+            ops,
+            _fs_impl_factory(Path(td)),
+            _fs_read,
+            enc=lambda v: str(v).encode(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# targeted invariants via hypothesis
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 7))
+def test_exactly_one_winner_invariant(n, w):
+    """For any group size and any winner, exactly one branch commits."""
+    w = w % n
+    store = BranchStore({"x": 0})
+    branches = store.fork(n=n)
+    store.write(branches[w], "x", 1)
+    store.commit(branches[w])
+    statuses = [store.status(b) for b in branches]
+    assert statuses.count(BranchStatus.COMMITTED) == 1
+    assert statuses.count(BranchStatus.STALE) == n - 1
+    assert store.read(BranchStore.ROOT, "x") == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 6))
+def test_nesting_depth_commit_chain(depth):
+    """A chain of nested branches commits level by level to the root."""
+    store = BranchStore({"v": 0})
+    chain = [BranchStore.ROOT]
+    for _ in range(depth):
+        chain.append(store.fork(chain[-1])[0])
+    store.write(chain[-1], "v", depth)
+    # visible only at the leaf until commits propagate
+    assert store.read(chain[-1], "v") == depth
+    for b in reversed(chain[1:]):
+        store.commit(b)
+    assert store.read(BranchStore.ROOT, "v") == depth

@@ -1,0 +1,108 @@
+"""BranchRuntime: atomic multi-domain composition (the branch() analogue)."""
+
+import pytest
+
+from repro.core import (
+    BR_COMMIT,
+    BR_CREATE,
+    BR_ISOLATE,
+    BR_KV,
+    BR_STATE,
+    BranchRuntime,
+    BranchStore,
+    KVBranchManager,
+    StaleBranchError,
+)
+from repro.core.branch import root_context
+from repro.core.errors import BranchError, BranchStateError
+
+
+@pytest.fixture
+def rt():
+    store = BranchStore({"workspace/file": b"orig"})
+    kv = KVBranchManager(num_pages=32, page_size=4)
+    return BranchRuntime(store, kv), root_context(store), kv
+
+
+def test_create_returns_indexed_handles(rt):
+    runtime, root, kv = rt
+    handles = runtime.create(root, n_branches=3)
+    assert [h.index for h in handles] == [1, 2, 3]
+    for h in handles:
+        assert h.state.is_active
+
+
+def test_listing2_pattern_first_commit_wins(rt):
+    """The paper's Listing 2: 3 branches, one succeeds, siblings -ESTALE."""
+    runtime, root, kv = rt
+    handles = runtime.create(root, n_branches=3)
+    # branch 2 "passes tests" and commits first
+    handles[1].state.write("workspace/file", b"fix-2")
+    runtime.commit(handles[1])
+    assert root.read("workspace/file") == b"fix-2"
+    # siblings lose the exclusive-group race
+    with pytest.raises(StaleBranchError):
+        runtime.commit(handles[0])
+    with pytest.raises(StaleBranchError):
+        handles[2].state.read("workspace/file")
+
+
+def test_kv_domain_forked_and_committed_together(rt):
+    runtime, root, kv = rt
+    seq = kv.new_seq(length=6)
+    handles = runtime.create(root, n_branches=2, flags=BR_STATE | BR_KV,
+                             kv_seqs=[seq])
+    child_seqs = [h.kv_seqs[seq] for h in handles]
+    assert all(kv.is_live(c) for c in child_seqs)
+    kv.prepare_append(child_seqs[0], 3)
+    runtime.commit(handles[0])
+    assert kv.length(seq) == 9          # parent adopted winner's KV
+    assert not kv.is_live(child_seqs[1])  # sibling KV invalidated too
+
+
+def test_atomic_cleanup_on_partial_failure():
+    store = BranchStore({"a": 1})
+    root = root_context(store)
+    runtime = BranchRuntime(store, kv_manager=None)
+    # BR_KV without a kv manager must fail AND unwind the state forks
+    with pytest.raises(BranchStateError):
+        runtime.create(root, n_branches=2, flags=BR_STATE | BR_KV,
+                       kv_seqs=[0])
+    # origin not frozen: the failed create left no live children behind
+    root.write("a", 2)
+    assert root.read("a") == 2
+
+
+def test_abort_frees_all_domains(rt):
+    runtime, root, kv = rt
+    seq = kv.new_seq(length=4)
+    free_before = kv.free_pages
+    handles = runtime.create(root, n_branches=2, flags=BR_STATE | BR_KV,
+                             kv_seqs=[seq])
+    for h in handles:
+        runtime.abort(h)
+    assert kv.free_pages == free_before
+    root.write("workspace/file", b"parent-resumes")  # origin unfrozen
+
+
+def test_multiplexed_syscall_style(rt):
+    runtime, root, kv = rt
+    handles = runtime(BR_CREATE, parent=root, n_branches=2)
+    handles[0].state.write("workspace/file", b"via-op")
+    runtime(BR_COMMIT, handle=handles[0])
+    assert root.read("workspace/file") == b"via-op"
+
+
+def test_br_state_required(rt):
+    runtime, root, kv = rt
+    with pytest.raises(ValueError):
+        runtime.create(root, n_branches=1, flags=BR_KV)
+
+
+def test_isolate_guard(rt):
+    runtime, root, kv = rt
+    h1, h2 = runtime.create(root, n_branches=2,
+                            flags=BR_STATE | BR_ISOLATE)
+    with pytest.raises(BranchError):
+        h1._sibling_guard(h2)
+    h1._sibling_guard(h1)  # self is fine
