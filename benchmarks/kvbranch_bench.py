@@ -56,7 +56,14 @@ def run() -> List[Tuple[str, float, str]]:
     rows.append(("decode_1seq_us", t_plain, "baseline"))
 
     branches = eng.fork(root, 4)
+    dispatches0, faults0 = eng.cow_dispatches, eng.cow_faults
     eng.decode(branches)  # triggers the CoW copies + compile for b=4
+    # all sibling tail-page faults are serviced by ONE fused device
+    # dispatch (the old path issued 2 jit calls per faulting page)
+    rows.append(("cow_faults_first_branched_step",
+                 float(eng.cow_faults - faults0), "shared_tail"))
+    rows.append(("cow_dispatches_first_branched_step",
+                 float(eng.cow_dispatches - dispatches0), "fused"))
     t_branched = _median_us(lambda: eng.decode(branches), trials=5)
     rows.append(("decode_4branches_us", t_branched,
                  "batched_siblings"))

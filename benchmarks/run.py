@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Tables:
   T5 (commit ∝ Δ)        -> commit_abort
   T6 (throughput)         -> throughput
   serving-scale branching -> kvbranch_bench
+  serve throughput        -> serve_throughput
   in-program exploration  -> explore_bench
 """
 
@@ -20,6 +21,7 @@ def main() -> None:
         commit_abort,
         explore_bench,
         kvbranch_bench,
+        serve_throughput,
         throughput,
     )
 
@@ -28,6 +30,7 @@ def main() -> None:
         ("commit_abort", commit_abort),
         ("throughput", throughput),
         ("kvbranch_bench", kvbranch_bench),
+        ("serve_throughput", serve_throughput),
         ("explore_bench", explore_bench),
     ]
     print("name,us_per_call,derived")

@@ -2,6 +2,9 @@
 
 Public API:
 
+* :class:`BranchTree` / :class:`BranchDomain` — the branch-lifecycle
+  kernel every state domain plugs into (ids, status, epochs, exclusive
+  commit groups, first-commit-wins, sibling invalidation).
 * :class:`BranchStore` / :class:`BranchContext` — leaf-granular CoW branch
   contexts over pytrees (host state domain, ≈ BranchFS).
 * :class:`KVBranchManager` — CoW paged KV / recurrent-state branching
@@ -13,6 +16,7 @@ Public API:
 """
 
 from repro.core.branch import BranchContext, root_context
+from repro.core.lifecycle import BranchDomain, BranchNode, BranchTree
 from repro.core.errors import (
     BranchError,
     BranchStateError,
@@ -45,6 +49,7 @@ from repro.core.store import explore as explore_threads
 
 __all__ = [
     "BranchContext", "root_context",
+    "BranchDomain", "BranchNode", "BranchTree",
     "BranchError", "BranchStateError", "FrozenOriginError",
     "NoSuchLeafError", "StaleBranchError",
     "ExploreResult", "explore", "explore_threads", "first_commit_wins",

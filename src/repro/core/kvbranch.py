@@ -17,6 +17,15 @@ size KV pages in HBM:
   siblings (their pages are decref'd and recycled) — first-commit-wins;
 * nesting falls out of fork-of-fork.
 
+The lifecycle state machine (status, epochs, first-commit-wins CAS,
+frozen origins, sibling invalidation) lives in the shared kernel,
+:class:`~repro.core.lifecycle.BranchTree`; this class is the BR_MEMORY
+payload domain plugged into it (DESIGN §2).  It owns only block tables,
+refcounts and the free list, moved by the ``on_fork/on_commit/on_abort/
+on_invalidate`` hooks.  Additional domains (e.g. the serving engine's
+token tails) may attach to the *same* tree, so one ``commit(seq)``
+atomically resolves every domain keyed by that sequence id.
+
 Host metadata (tables, refcounts, free list) lives here; the page buffers
 themselves are device arrays owned by the serving engine and mutated
 functionally (``jax.Array.at``) or by the Pallas paged-attention kernel.
@@ -24,38 +33,17 @@ functionally (``jax.Array.at``) or by the Pallas paged-attention kernel.
 
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
-from enum import Enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.errors import (
-    BranchStateError,
-    FrozenOriginError,
-    StaleBranchError,
-)
+from repro.core.errors import FrozenOriginError
+from repro.core.lifecycle import LIVE, BranchStatus, BranchTree
 
-
-class SeqStatus(Enum):
-    ACTIVE = "active"
-    FROZEN = "frozen"      # has live children (frozen origin)
-    COMMITTED = "committed"
-    ABORTED = "aborted"
-    STALE = "stale"
-
-
-@dataclass
-class _Seq:
-    seq_id: int
-    block_table: List[int]
-    length: int
-    parent: Optional[int] = None
-    children: List[int] = field(default_factory=list)
-    status: SeqStatus = SeqStatus.ACTIVE
-    parent_epoch_at_fork: int = 0
-    epoch: int = 0
+# Historical alias: sequence status *is* branch status now that every
+# domain shares the kernel's vocabulary.
+SeqStatus = BranchStatus
 
 
 @dataclass(frozen=True)
@@ -76,7 +64,7 @@ class AppendSlot:
 
 
 class KVBranchManager:
-    """Block tables + refcounts + branch lifecycle for paged KV caches."""
+    """Block tables + refcounts plugged into the branch-lifecycle kernel."""
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages < 1 or page_size < 1:
@@ -85,8 +73,19 @@ class KVBranchManager:
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refcount = np.zeros((num_pages,), dtype=np.int32)
-        self._seqs: Dict[int, _Seq] = {}
-        self._ids = itertools.count(0)
+        # KV semantics: forking freezes the origin (appends denied) until
+        # all children resolve; committed sequences are gone for good.
+        self._tree = BranchTree(freeze_on_fork=True,
+                                allow_fork_resolved=False)
+        self._tree.attach(self)
+        self._tables: Dict[int, List[int]] = {}
+        self._lengths: Dict[int, int] = {}
+
+    @property
+    def tree(self) -> BranchTree:
+        """The lifecycle kernel; other domains (token tails, executor
+        slots) attach here to resolve atomically with the KV domain."""
+        return self._tree
 
     # ------------------------------------------------------------------
     # page accounting
@@ -117,52 +116,61 @@ class KVBranchManager:
             assert self._refcount[p] >= 0, f"page {p} refcount underflow"
 
     # ------------------------------------------------------------------
-    # sequence lifecycle
+    # BranchDomain payload hooks (called by the kernel, under its lock)
     # ------------------------------------------------------------------
-    def _seq(self, seq_id: int) -> _Seq:
-        try:
-            return self._seqs[seq_id]
-        except KeyError:
-            raise BranchStateError(f"unknown sequence {seq_id}") from None
+    def on_fork(self, parent: int, children: List[int]) -> None:
+        table = self._tables[parent]
+        for c in children:
+            self._incref(table)
+            self._tables[c] = list(table)
+            self._lengths[c] = self._lengths[parent]
 
-    def _check_live(self, seq: _Seq) -> None:
-        if seq.status is SeqStatus.STALE:
-            raise StaleBranchError(f"sequence {seq.seq_id} is stale (-ESTALE)")
-        if seq.status in (SeqStatus.COMMITTED, SeqStatus.ABORTED):
-            raise BranchStateError(
-                f"sequence {seq.seq_id} is {seq.status.value}"
-            )
-        if seq.parent is not None:
-            parent = self._seqs[seq.parent]
-            if parent.epoch != seq.parent_epoch_at_fork:
-                seq.status = SeqStatus.STALE
-                raise StaleBranchError(
-                    f"sequence {seq.seq_id} is stale (-ESTALE)"
-                )
+    def on_commit(self, child: int, parent: int) -> None:
+        # The parent adopts the child's table, *transferring* the child's
+        # page references (no incref/decref on the winning table).
+        self._decref(self._tables[parent])
+        self._tables[parent] = self._tables[child]
+        self._lengths[parent] = self._lengths[child]
+        self._tables[child] = []
 
+    def on_abort(self, branch: int) -> None:
+        self._release_pages(branch)
+
+    def on_invalidate(self, branch: int) -> None:
+        self._release_pages(branch)
+
+    def _release_pages(self, branch: int) -> None:
+        table = self._tables.get(branch)
+        if table:
+            self._decref(table)
+        self._tables[branch] = []
+
+    # ------------------------------------------------------------------
+    # sequence lifecycle (delegated to the kernel)
+    # ------------------------------------------------------------------
     def is_live(self, seq_id: int) -> bool:
-        seq = self._seqs.get(seq_id)
-        if seq is None:
-            return False
-        try:
-            self._check_live(seq)
-        except (StaleBranchError, BranchStateError):
-            return False
-        return True
+        return self._tree.is_live(seq_id)
+
+    def status(self, seq_id: int) -> BranchStatus:
+        return self._tree.status(seq_id)
 
     def new_seq(self, length: int = 0) -> int:
         """Create a root sequence with enough pages for ``length`` tokens."""
-        n_pages = -(-max(length, 0) // self.page_size)
-        table = [self._alloc_page() for _ in range(n_pages)]
-        sid = next(self._ids)
-        self._seqs[sid] = _Seq(seq_id=sid, block_table=table, length=length)
-        return sid
+        with self._tree.lock:
+            n_pages = -(-max(length, 0) // self.page_size)
+            table = [self._alloc_page() for _ in range(n_pages)]
+            sid = self._tree.create_root()
+            self._tables[sid] = table
+            self._lengths[sid] = length
+            return sid
 
     def length(self, seq_id: int) -> int:
-        return self._seq(seq_id).length
+        self._tree.node(seq_id)
+        return self._lengths[seq_id]
 
     def block_table(self, seq_id: int) -> List[int]:
-        return list(self._seq(seq_id).block_table)
+        self._tree.node(seq_id)
+        return list(self._tables[seq_id])
 
     # ------------------------------------------------------------------
     # fork / append(CoW) / commit / abort
@@ -173,23 +181,7 @@ class KVBranchManager:
         O(table length) integer work, zero HBM traffic; the parent becomes
         a frozen origin until all children resolve.
         """
-        parent = self._seq(seq_id)
-        self._check_live(parent)
-        out: List[int] = []
-        for _ in range(n):
-            self._incref(parent.block_table)
-            cid = next(self._ids)
-            self._seqs[cid] = _Seq(
-                seq_id=cid,
-                block_table=list(parent.block_table),
-                length=parent.length,
-                parent=seq_id,
-                parent_epoch_at_fork=parent.epoch,
-            )
-            parent.children.append(cid)
-            out.append(cid)
-        parent.status = SeqStatus.FROZEN
-        return out
+        return self._tree.fork(seq_id, n)
 
     def prepare_append(self, seq_id: int, n_tokens: int = 1) -> List[AppendSlot]:
         """Reserve slots for the next ``n_tokens`` tokens of ``seq_id``.
@@ -199,32 +191,32 @@ class KVBranchManager:
         The block table and length are updated eagerly (metadata is the
         source of truth; device writes follow).
         """
-        seq = self._seq(seq_id)
-        self._check_live(seq)
-        if seq.status is SeqStatus.FROZEN:
-            raise FrozenOriginError(
-                f"sequence {seq_id} has live children and is frozen"
-            )
-        slots: List[AppendSlot] = []
-        for _ in range(n_tokens):
-            offset = seq.length % self.page_size
-            cow: Tuple[CowOp, ...] = ()
-            if offset == 0:
-                # new page needed
-                page = self._alloc_page()
-                seq.block_table.append(page)
-            else:
-                page = seq.block_table[-1]
-                if self._refcount[page] > 1:
-                    # shared tail page: copy-on-write
-                    new_page = self._alloc_page()
-                    cow = (CowOp(src_page=page, dst_page=new_page),)
-                    self._decref([page])
-                    seq.block_table[-1] = new_page
-                    page = new_page
-            seq.length += 1
-            slots.append(AppendSlot(page=page, offset=offset, cow=cow))
-        return slots
+        with self._tree.lock:
+            node = self._tree.check_live(seq_id)
+            if node.status is BranchStatus.FROZEN:
+                raise FrozenOriginError(
+                    f"sequence {seq_id} has live children and is frozen")
+            table = self._tables[seq_id]
+            slots: List[AppendSlot] = []
+            for _ in range(n_tokens):
+                offset = self._lengths[seq_id] % self.page_size
+                cow: Tuple[CowOp, ...] = ()
+                if offset == 0:
+                    # new page needed
+                    page = self._alloc_page()
+                    table.append(page)
+                else:
+                    page = table[-1]
+                    if self._refcount[page] > 1:
+                        # shared tail page: copy-on-write
+                        new_page = self._alloc_page()
+                        cow = (CowOp(src_page=page, dst_page=new_page),)
+                        self._decref([page])
+                        table[-1] = new_page
+                        page = new_page
+                self._lengths[seq_id] += 1
+                slots.append(AppendSlot(page=page, offset=offset, cow=cow))
+            return slots
 
     def commit(self, seq_id: int) -> int:
         """First-commit-wins: promote this child's table into the parent.
@@ -233,67 +225,15 @@ class KVBranchManager:
         Returns the parent sequence id (which resumes ACTIVE with the
         child's content, PID-takeover style).
         """
-        seq = self._seq(seq_id)
-        self._check_live(seq)
-        if seq.children and any(
-            self._seqs[c].status in (SeqStatus.ACTIVE, SeqStatus.FROZEN)
-            for c in seq.children
-        ):
-            raise BranchStateError(
-                f"sequence {seq_id} has live children; resolve them first"
-            )
-        if seq.parent is None:
-            raise BranchStateError("root sequence cannot commit")
-        parent = self._seqs[seq.parent]
-        # 1. win the race (epoch CAS under the GIL-protected metadata)
-        parent.epoch += 1
-        # 2. parent adopts the child's table (transfer the child's refs)
-        self._decref(parent.block_table)
-        parent.block_table = list(seq.block_table)
-        parent.length = seq.length
-        seq.status = SeqStatus.COMMITTED
-        # 3. invalidate siblings, recycle their pages
-        for cid in parent.children:
-            sib = self._seqs[cid]
-            if cid != seq_id and sib.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN):
-                self._invalidate(sib)
-        parent.children = []
-        parent.status = SeqStatus.ACTIVE
-        return parent.seq_id
+        return self._tree.commit(seq_id)
 
     def abort(self, seq_id: int) -> None:
         """Discard the branch; siblings stay valid; parent may resume."""
-        seq = self._seq(seq_id)
-        if seq.status is SeqStatus.STALE:
-            return  # already recycled by the winner's commit
-        if seq.status in (SeqStatus.COMMITTED, SeqStatus.ABORTED):
-            raise BranchStateError(f"sequence {seq_id} is {seq.status.value}")
-        self._invalidate(seq, status=SeqStatus.ABORTED)
-        if seq.parent is not None:
-            parent = self._seqs[seq.parent]
-            if parent.status is SeqStatus.FROZEN and not any(
-                self._seqs[c].status in (SeqStatus.ACTIVE, SeqStatus.FROZEN)
-                for c in parent.children
-            ):
-                # all children resolved -> the parent resumes (paper §5.2:
-                # "if all branches abort, the parent resumes")
-                parent.status = SeqStatus.ACTIVE
-                parent.children = []
-
-    def _invalidate(self, seq: _Seq, status: SeqStatus = SeqStatus.STALE) -> None:
-        for cid in seq.children:
-            child = self._seqs[cid]
-            if child.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN):
-                self._invalidate(child)
-        self._decref(seq.block_table)
-        seq.block_table = []
-        seq.status = status
+        self._tree.abort(seq_id)
 
     def release(self, seq_id: int) -> None:
         """Free a root/active sequence outright (serving-slot eviction)."""
-        seq = self._seq(seq_id)
-        if seq.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN):
-            self._invalidate(seq, status=SeqStatus.ABORTED)
+        self._tree.invalidate(seq_id, status=BranchStatus.ABORTED)
 
     # ------------------------------------------------------------------
     # dense views for the device step
@@ -306,25 +246,28 @@ class KVBranchManager:
         bt = np.zeros((len(seq_ids), max_pages), dtype=np.int32)
         lens = np.zeros((len(seq_ids),), dtype=np.int32)
         for i, sid in enumerate(seq_ids):
-            seq = self._seq(sid)
-            table = seq.block_table
+            self._tree.node(sid)
+            table = self._tables[sid]
             if len(table) > max_pages:
                 raise ValueError(
                     f"sequence {sid} needs {len(table)} pages > {max_pages}"
                 )
             bt[i, : len(table)] = table
-            lens[i] = seq.length
+            lens[i] = self._lengths[sid]
         return bt, lens
 
     def stats(self) -> Dict[str, int]:
-        live = sum(
-            1
-            for s in self._seqs.values()
-            if s.status in (SeqStatus.ACTIVE, SeqStatus.FROZEN)
-        )
         return {
-            "sequences_live": live,
+            "sequences_live": self._tree.live_count(),
             "pages_total": self.num_pages,
             "pages_free": len(self._free),
             "pages_shared": int((self._refcount > 1).sum()),
         }
+
+
+__all__ = [
+    "AppendSlot",
+    "CowOp",
+    "KVBranchManager",
+    "SeqStatus",
+]

@@ -4,10 +4,20 @@ The paper's central argument for a syscall (§5, Table 3) is *atomic
 composition*: forking filesystem state, process groups, and memory in one
 call, with kernel-side cleanup on partial failure.  In branchx the state
 domains are (a) the host pytree store (≈ BR_FS), (b) device-resident
-paged-KV / recurrent state (≈ BR_MEMORY), and (c) executor slots in the
-serving/training engine (≈ the process group).  ``BranchRuntime.create``
-forks all requested domains or none — any failure unwinds the domains
-already forked, mirroring the kernel's cleanup-on-failure guarantee.
+paged-KV / recurrent state (≈ BR_MEMORY), and (c) whatever additional
+domains are attached to the KV manager's lifecycle kernel — e.g. the
+serving engine's token tails, which resolve in the same kernel-level
+commit (≈ the process group).  ``BranchRuntime.create`` forks all
+requested domains or none — any failure unwinds the domains already
+forked, mirroring the kernel's cleanup-on-failure guarantee.
+
+``BranchRuntime.commit`` is the cross-domain first-commit-wins arbiter:
+it takes the KV kernel's lock for the whole composite commit, verifies
+every KV-domain branch is still live, and only then lets the state
+store's epoch CAS decide the race — so a commit that loses in *any*
+domain loses in *all* of them, and the loser's branches are unwound
+rather than left half-committed (no stranded token tails, no leaked
+page refcounts; see DESIGN §3).
 
 Flags mirror Listing 1:
 
@@ -22,6 +32,7 @@ Flags mirror Listing 1:
 
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -66,6 +77,18 @@ class BranchRuntime:
                  kv_manager: Optional[Any] = None):
         self.store = store
         self.kv = kv_manager  # duck-typed: fork(seq, n), commit(seq), abort(seq)
+
+    # ------------------------------------------------------------------
+    def _kv_lock(self) -> contextlib.AbstractContextManager:
+        """The KV kernel's lock, if the KV manager exposes one.
+
+        Holding it across a composite commit serializes the cross-domain
+        race decision against kernel-level commits on the same tree.
+        """
+        tree = getattr(self.kv, "tree", None)
+        if tree is not None:
+            return tree.lock
+        return contextlib.nullcontext()
 
     # ------------------------------------------------------------------
     def create(
@@ -124,18 +147,53 @@ class BranchRuntime:
     def commit(self, handle: BranchHandle) -> int:
         """BR_COMMIT: win the exclusive-group race or raise StaleBranchError.
 
-        Order mirrors §5.2: the group race is decided first (by the state
-        store's epoch CAS under its lock), then filesystem-domain changes
-        apply, then KV/memory domain, then siblings are invalidated
-        (their next operation raises ``StaleBranchError`` = -ESTALE).
+        Order mirrors §5.2, but the race is decided *once* for the whole
+        composite: under the KV kernel's lock we first verify every KV
+        branch of this handle is still live (if any lost a kernel-level
+        race, this handle lost everywhere — its remaining domains are
+        unwound and ``StaleBranchError`` = -ESTALE is raised), then the
+        state store's epoch CAS decides the group race, then the KV
+        domain (and every domain attached to its kernel, e.g. serving
+        token tails) promotes, then siblings are invalidated.
         """
         if handle._resolved:
             raise BranchStateError("handle already resolved")
         assert handle.state is not None
-        parent = handle.state.commit()  # first-commit-wins decided here
-        if handle.flags & BR_KV and self.kv is not None:
-            for parent_seq, child_seq in handle.kv_seqs.items():
-                self.kv.commit(child_seq)
+        use_kv = bool(handle.flags & BR_KV) and self.kv is not None
+        with self._kv_lock() if use_kv else contextlib.nullcontext():
+            if use_kv:
+                dead = [c for c in handle.kv_seqs.values()
+                        if not self.kv.is_live(c)]
+                if dead:
+                    # The KV domain already lost a first-commit-wins race:
+                    # the composite commit loses atomically.  Unwind the
+                    # still-live domains so nothing is stranded.
+                    self.abort(handle)
+                    raise StaleBranchError(
+                        f"KV branches {dead} were invalidated by a sibling "
+                        "commit; composite commit loses (-ESTALE)")
+                tree = getattr(self.kv, "tree", None)
+                if tree is not None:
+                    busy = [c for c in handle.kv_seqs.values()
+                            if tree.live_children(c)]
+                    if busy:
+                        # A frozen KV child would pass is_live but fail
+                        # its kernel commit; refuse BEFORE the state CAS
+                        # so no domain half-commits.
+                        raise BranchStateError(
+                            f"KV branches {busy} have live children; "
+                            "resolve them before the composite commit")
+            try:
+                parent = handle.state.commit()  # first-commit-wins here
+            except StaleBranchError:
+                # The state domain lost the group race: the composite
+                # commit loses atomically — unwind the KV domain too so
+                # no pages or token tails outlive the loser.
+                self.abort(handle)
+                raise
+            if use_kv:
+                for parent_seq, child_seq in handle.kv_seqs.items():
+                    self.kv.commit(child_seq)
         handle._resolved = True
         return parent
 

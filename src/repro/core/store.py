@@ -14,26 +14,23 @@ pytree *leaves* playing the role of files:
   "reappear" from the base.
 * **Frozen origin**: a branch with live children rejects writes
   (`FrozenOriginError`).
-* **First-commit-wins**: commits race on the parent's epoch; the first
-  commit merges its delta into the parent and bumps the parent epoch,
-  which invalidates all siblings (`StaleBranchError`, the ``-ESTALE``
-  analogue).
 * **Nesting**: branches fork sub-branches; commit applies to the
   *immediate* parent only (paper §5.2 "Nested Branches").
 
-The store is thread-safe: concurrent explorer threads may race commits and
-the winner is decided under a single lock, mirroring the kernel's
-exclusive commit group.
+The lifecycle itself (ids, parent/child links, status, epochs, exclusive
+commit groups, first-commit-wins, recursive sibling invalidation) is NOT
+implemented here: BranchStore is a :class:`~repro.core.lifecycle.
+BranchDomain` plugged into the shared :class:`~repro.core.lifecycle.
+BranchTree` kernel (DESIGN §2).  This module owns only the payload —
+delta dicts and tombstones — and moves it in the ``on_fork/on_commit/
+on_abort/on_invalidate`` hooks.  Thread-safety comes from the tree's
+lock, mirroring the kernel's exclusive commit group.
 """
 
 from __future__ import annotations
 
-import itertools
 import threading
-import time
-from dataclasses import dataclass, field
-from enum import Enum
-from typing import Any, Callable, Dict, Iterator, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 
@@ -43,6 +40,7 @@ from repro.core.errors import (
     NoSuchLeafError,
     StaleBranchError,
 )
+from repro.core.lifecycle import BranchStatus, BranchTree
 
 
 class _Tombstone:
@@ -62,96 +60,71 @@ class _Tombstone:
 TOMBSTONE = _Tombstone()
 
 
-class BranchStatus(Enum):
-    ACTIVE = "active"
-    COMMITTED = "committed"
-    ABORTED = "aborted"
-    STALE = "stale"  # invalidated by a sibling's commit (-ESTALE)
-
-
-@dataclass
-class _Node:
-    """One branch context: a delta layer + lifecycle bookkeeping."""
-
-    branch_id: int
-    parent: Optional[int]
-    delta: Dict[str, Any] = field(default_factory=dict)
-    status: BranchStatus = BranchStatus.ACTIVE
-    # Parent epoch observed at fork time.  A commit is valid only while the
-    # parent's epoch is unchanged; the winning commit bumps it, so every
-    # sibling's next commit/read attempt fails the epoch check (-ESTALE).
-    parent_epoch_at_fork: int = 0
-    epoch: int = 0  # bumped when *this* node accepts a child's commit
-    children: List[int] = field(default_factory=list)
-    group: Optional[int] = None  # exclusive commit group id (BR_CREATE set)
-    created_at: float = field(default_factory=time.monotonic)
-
-
 class BranchStore:
     """A tree of CoW branch contexts over a flat ``{path: leaf}`` namespace.
 
     The root (branch id 0) is the base "filesystem".  All other branches
     are created by :meth:`fork` and resolved by :meth:`commit` /
-    :meth:`abort`.
+    :meth:`abort` — both delegated to the lifecycle kernel, with this
+    class acting as the BR_FS payload domain.
     """
 
     ROOT = 0
 
     def __init__(self, base: Optional[Mapping[str, Any]] = None):
-        self._lock = threading.RLock()
-        self._ids = itertools.count(1)
-        self._groups = itertools.count(1)
-        root = _Node(branch_id=self.ROOT, parent=None)
-        root.delta = dict(base or {})
-        self._nodes: Dict[int, _Node] = {self.ROOT: root}
+        # Committed interior nodes may still be forked from (their state
+        # is merged upward, but chain resolution still works), and the
+        # origin stays ACTIVE while children are live — writes are gated
+        # on has_live_children instead of a FROZEN status.
+        self._tree = BranchTree(freeze_on_fork=False,
+                                allow_fork_resolved=True)
+        self._deltas: Dict[int, Dict[str, Any]] = {}
+        self._tree.attach(self)
+        root = self._tree.create_root()
+        assert root == self.ROOT
+        self._deltas[root] = dict(base or {})
+
+    @property
+    def tree(self) -> BranchTree:
+        """The lifecycle kernel (shared with any co-registered domains)."""
+        return self._tree
+
+    @property
+    def _lock(self) -> threading.RLock:
+        return self._tree.lock
 
     # ------------------------------------------------------------------
-    # helpers
+    # BranchDomain payload hooks (called by the kernel, under its lock)
     # ------------------------------------------------------------------
-    def _node(self, branch_id: int) -> _Node:
-        try:
-            return self._nodes[branch_id]
-        except KeyError:
-            raise BranchStateError(f"unknown branch id {branch_id!r}") from None
+    def on_fork(self, parent: int, children: List[int]) -> None:
+        for c in children:
+            self._deltas[c] = {}   # O(1): children start with empty deltas
 
-    def _check_live(self, node: _Node) -> None:
-        if node.status is BranchStatus.STALE:
-            raise StaleBranchError(
-                f"branch {node.branch_id} was invalidated by a sibling commit"
-            )
-        if node.status is not BranchStatus.ACTIVE:
-            raise BranchStateError(
-                f"branch {node.branch_id} is {node.status.value}, not active"
-            )
-        # Epoch check: if the parent epoch moved past what we forked from,
-        # a sibling committed and we are stale even if not yet marked.
-        if node.parent is not None:
-            parent = self._nodes[node.parent]
-            if parent.epoch != node.parent_epoch_at_fork:
-                node.status = BranchStatus.STALE
-                raise StaleBranchError(
-                    f"branch {node.branch_id} is stale "
-                    f"(parent epoch {parent.epoch} != "
-                    f"{node.parent_epoch_at_fork} at fork)"
-                )
+    def on_commit(self, child: int, parent: int) -> None:
+        # Apply tombstones first, then modified leaves (BranchFS §4.3).
+        delta = self._deltas[child]
+        parent_delta = self._deltas[parent]
+        parent_is_base = self._tree.node(parent).parent is None
+        for path, leaf in delta.items():
+            if leaf is TOMBSTONE:
+                if parent_is_base:
+                    # committing into the base: delete outright
+                    parent_delta.pop(path, None)
+                else:
+                    parent_delta[path] = TOMBSTONE
+        for path, leaf in delta.items():
+            if leaf is not TOMBSTONE:
+                parent_delta[path] = leaf
+        self._deltas[child] = {}
 
-    def _chain(self, branch_id: int) -> Iterator[_Node]:
-        """Yield nodes from ``branch_id`` up to and including the root."""
-        cur: Optional[int] = branch_id
-        while cur is not None:
-            node = self._nodes[cur]
-            yield node
-            cur = node.parent
+    def on_abort(self, branch: int) -> None:
+        self._deltas[branch] = {}
 
-    def _live_children(self, node: _Node) -> List[_Node]:
-        return [
-            self._nodes[c]
-            for c in node.children
-            if self._nodes[c].status is BranchStatus.ACTIVE
-        ]
+    def on_invalidate(self, branch: int) -> None:
+        self._deltas[branch] = {}
 
     # ------------------------------------------------------------------
-    # lifecycle: fork / commit / abort
+    # lifecycle: fork / commit / abort (delegated to the kernel)
     # ------------------------------------------------------------------
     def fork(self, parent: int = ROOT, n: int = 1) -> List[int]:
         """Create ``n`` sibling branches from a frozen origin.  O(1) each.
@@ -160,110 +133,44 @@ class BranchStore:
         can commit; the winner invalidates the rest (paper §5.2
         BR_CREATE).
         """
-        if n < 1:
-            raise ValueError("n must be >= 1")
-        with self._lock:
-            pnode = self._node(parent)
-            if pnode.status not in (BranchStatus.ACTIVE, BranchStatus.COMMITTED):
-                # committed interior nodes may still be forked from (their
-                # state is merged upward, but chain resolution still works)
-                self._check_live(pnode)
-            group = next(self._groups)
-            out: List[int] = []
-            for _ in range(n):
-                bid = next(self._ids)
-                node = _Node(
-                    branch_id=bid,
-                    parent=parent,
-                    parent_epoch_at_fork=pnode.epoch,
-                    group=group,
-                )
-                self._nodes[bid] = node
-                pnode.children.append(bid)
-                out.append(bid)
-            return out
+        return self._tree.fork(parent, n)
 
     def commit(self, branch_id: int) -> int:
         """Atomically apply this branch's delta to its immediate parent.
 
-        First-commit-wins: under the store lock, the epoch check decides
-        the race.  On success the parent's epoch is bumped, turning every
+        First-commit-wins: the kernel's epoch CAS decides the race under
+        its lock; on success the parent's epoch is bumped, turning every
         sibling stale.  Returns the parent id (the branch "replaces" the
         parent, analogous to the PID takeover of ``BR_COMMIT``).
         """
-        with self._lock:
-            node = self._node(branch_id)
-            self._check_live(node)  # raises StaleBranchError if we lost
-            if self._live_children(node):
-                raise BranchStateError(
-                    f"branch {branch_id} has live children; commit or abort "
-                    "them first (commit applies to the immediate parent only)"
-                )
-            assert node.parent is not None, "root cannot commit"
-            parent = self._nodes[node.parent]
-            # Apply tombstones first, then modified leaves (BranchFS §4.3).
-            for path, leaf in node.delta.items():
-                if leaf is TOMBSTONE:
-                    if parent.parent is None:
-                        # committing into the base: delete outright
-                        parent.delta.pop(path, None)
-                    else:
-                        parent.delta[path] = TOMBSTONE
-            for path, leaf in node.delta.items():
-                if leaf is not TOMBSTONE:
-                    parent.delta[path] = leaf
-            node.status = BranchStatus.COMMITTED
-            node.delta = {}
-            parent.epoch += 1  # invalidates all siblings
-            for sid in parent.children:
-                sib = self._nodes[sid]
-                if sid != branch_id and sib.status is BranchStatus.ACTIVE:
-                    sib.status = BranchStatus.STALE
-                    self._invalidate_descendants(sib)
-            return parent.branch_id
+        return self._tree.commit(branch_id)
 
     def abort(self, branch_id: int) -> None:
         """Discard the branch's delta; siblings remain valid.  O(1)."""
-        with self._lock:
-            node = self._node(branch_id)
-            if node.status is BranchStatus.STALE:
-                # aborting a stale branch is allowed (cleanup after -ESTALE)
-                node.delta = {}
-                return
-            if node.status is not BranchStatus.ACTIVE:
-                raise BranchStateError(
-                    f"branch {branch_id} is {node.status.value}"
-                )
-            node.status = BranchStatus.ABORTED
-            node.delta = {}
-            self._invalidate_descendants(node)
-
-    def _invalidate_descendants(self, node: _Node) -> None:
-        for cid in node.children:
-            child = self._nodes[cid]
-            if child.status is BranchStatus.ACTIVE:
-                child.status = BranchStatus.STALE
-            child.delta = {}
-            self._invalidate_descendants(child)
+        self._tree.abort(branch_id)
 
     # ------------------------------------------------------------------
     # namespace ops (the "filesystem" interface)
     # ------------------------------------------------------------------
+    def _writable(self, branch_id: int) -> int:
+        self._tree.check_live(branch_id)
+        if self._tree.has_live_children(branch_id):
+            raise FrozenOriginError(
+                f"branch {branch_id} has live children and is frozen")
+        return branch_id
+
     def read(self, branch_id: int, path: str) -> Any:
         """Chain resolution: branch delta → ancestors → base (§4.2)."""
         with self._lock:
-            node = self._node(branch_id)
-            if node.status is BranchStatus.ACTIVE:
-                self._check_live(node)
-            elif node.status is BranchStatus.STALE:
+            status = self._tree.status(branch_id)
+            if status is BranchStatus.STALE:
                 raise StaleBranchError(
-                    f"branch {branch_id} was invalidated (SIGBUS analogue)"
-                )
-            elif node.status is BranchStatus.ABORTED:
+                    f"branch {branch_id} was invalidated (SIGBUS analogue)")
+            if status is BranchStatus.ABORTED:
                 raise BranchStateError(f"branch {branch_id} was aborted")
-            for level in self._chain(branch_id):
-                if path in level.delta:
-                    leaf = level.delta[path]
+            for level in self._tree.chain(branch_id):
+                if path in self._deltas[level]:
+                    leaf = self._deltas[level][path]
                     if leaf is TOMBSTONE:
                         raise NoSuchLeafError(path)
                     return leaf
@@ -278,62 +185,42 @@ class BranchStore:
 
     def write(self, branch_id: int, path: str, value: Any) -> None:
         with self._lock:
-            node = self._node(branch_id)
-            self._check_live(node)
-            if self._live_children(node):
-                raise FrozenOriginError(
-                    f"branch {branch_id} has live children and is frozen"
-                )
-            node.delta[path] = value
+            self._writable(branch_id)
+            self._deltas[branch_id][path] = value
 
     def write_many(self, branch_id: int, items: Mapping[str, Any]) -> None:
         with self._lock:
-            node = self._node(branch_id)
-            self._check_live(node)
-            if self._live_children(node):
-                raise FrozenOriginError(
-                    f"branch {branch_id} has live children and is frozen"
-                )
-            node.delta.update(items)
+            self._writable(branch_id)
+            self._deltas[branch_id].update(items)
 
     def delete(self, branch_id: int, path: str) -> None:
         """Record a tombstone (the leaf must currently resolve)."""
         with self._lock:
-            node = self._node(branch_id)
-            self._check_live(node)
-            if self._live_children(node):
-                raise FrozenOriginError(
-                    f"branch {branch_id} has live children and is frozen"
-                )
+            self._writable(branch_id)
             if not self.exists(branch_id, path):
                 raise NoSuchLeafError(path)
-            node.delta[path] = TOMBSTONE
+            self._deltas[branch_id][path] = TOMBSTONE
 
     def listdir(self, branch_id: int) -> List[str]:
         """Effective namespace: union along the chain minus tombstones."""
         with self._lock:
-            self._node(branch_id)
+            self._tree.node(branch_id)
             seen: Dict[str, bool] = {}
-            for level in self._chain(branch_id):
-                for path, leaf in level.delta.items():
+            for level in self._tree.chain(branch_id):
+                for path, leaf in self._deltas[level].items():
                     if path not in seen:
                         seen[path] = leaf is not TOMBSTONE
             return sorted(p for p, alive in seen.items() if alive)
 
     def delta_size(self, branch_id: int) -> int:
-        return len(self._node(branch_id).delta)
+        self._tree.node(branch_id)
+        return len(self._deltas[branch_id])
 
     def status(self, branch_id: int) -> BranchStatus:
-        with self._lock:
-            node = self._node(branch_id)
-            if node.status is BranchStatus.ACTIVE and node.parent is not None:
-                parent = self._nodes[node.parent]
-                if parent.epoch != node.parent_epoch_at_fork:
-                    node.status = BranchStatus.STALE
-            return node.status
+        return self._tree.status(branch_id)
 
     def epoch(self, branch_id: int) -> int:
-        return self._node(branch_id).epoch
+        return self._tree.epoch(branch_id)
 
     # ------------------------------------------------------------------
     # pytree convenience layer
@@ -365,7 +252,7 @@ class BranchStore:
     # introspection for tests / benchmarks
     # ------------------------------------------------------------------
     def chain_depth(self, branch_id: int) -> int:
-        return sum(1 for _ in self._chain(branch_id)) - 1
+        return self._tree.chain_depth(branch_id)
 
     def consolidated_view(self, branch_id: int) -> Dict[str, Any]:
         """Materialize the flat effective namespace.
@@ -376,8 +263,8 @@ class BranchStore:
         with self._lock:
             out: Dict[str, Any] = {}
             dead: set = set()
-            for level in self._chain(branch_id):
-                for path, leaf in level.delta.items():
+            for level in self._tree.chain(branch_id):
+                for path, leaf in self._deltas[level].items():
                     if path in out or path in dead:
                         continue
                     if leaf is TOMBSTONE:

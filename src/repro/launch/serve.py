@@ -1,7 +1,9 @@
-"""Serving entry point: branchable paged-KV engine.
+"""Serving entry point: scheduler-driven branchable paged-KV engine.
 
-Demo mode generates continuations for a few prompts with N-way agentic
-exploration per prompt (fork, decode, score, first-commit-wins)::
+Demo mode pushes a stream of requests through the :class:`Scheduler`
+(admission + continuous batching) with N-way agentic exploration per
+prompt: fork (page-budget-aware), decode branches in the running batch,
+score, first-commit-wins commit::
 
     python -m repro.launch.serve --arch paper-agentic --branches 3
 """
@@ -21,11 +23,14 @@ def main(argv=None) -> int:
     ap.add_argument("--branches", type=int, default=3)
     ap.add_argument("--tokens", type=int, default=8)
     ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=2.0)
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced
     from repro.models.model import Model
+    from repro.runtime.scheduler import (
+        AdmissionDenied, Scheduler, SchedulerConfig)
     from repro.runtime.serve_loop import ServeEngine
 
     cfg = get_config(args.arch)
@@ -36,13 +41,30 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=1024, page_size=8,
                          max_pages_per_seq=64)
+    sched = Scheduler(engine, SchedulerConfig(max_batch=args.max_batch))
 
     key = jax.random.PRNGKey(1)
+    roots = {}
     for r in range(args.requests):
-        prompt = list(np.random.default_rng(r).integers(
-            1, cfg.vocab_size, size=6))
-        root = engine.add_request([int(t) for t in prompt])
-        branches = engine.fork(root, args.branches)
+        prompt = [int(t) for t in np.random.default_rng(r).integers(
+            1, cfg.vocab_size, size=6)]
+        # decode budget covers the exploration tokens; the scheduler
+        # admits when the page pool can hold prompt + reserve
+        rid = sched.submit(prompt, max_new_tokens=args.tokens + 1)
+        roots[rid] = prompt
+    sched.admit()
+
+    for rid, prompt in roots.items():
+        try:
+            root = sched.seq_of(rid)
+        except Exception as e:
+            print(f"request {rid}: not admitted ({e}); skipped")
+            continue
+        try:
+            branches = sched.fork(root, args.branches)
+        except AdmissionDenied as e:
+            print(f"request {rid}: fork denied ({e}); decoding unforked")
+            branches = [root]
         for _ in range(args.tokens):
             key, k = jax.random.split(key)
             engine.decode(branches, greedy=False,
@@ -50,11 +72,12 @@ def main(argv=None) -> int:
         scores = [float(np.mean(engine.tokens(b)[len(prompt):]))
                   for b in branches]
         best = branches[int(np.argmax(scores))]
-        engine.commit(best)
-        print(f"request {r}: prompt {prompt} -> "
+        if best != root:
+            engine.commit(best)
+        print(f"request {rid}: prompt {prompt} -> "
               f"{engine.tokens(root)[len(prompt):]} "
-              f"(best of {args.branches}, scores {scores})")
-    print(f"engine stats: {engine.stats()}")
+              f"(best of {len(branches)}, scores {scores})")
+    print(f"scheduler stats: {sched.stats()}")
     return 0
 
 

@@ -1,6 +1,13 @@
 from repro.runtime.train_loop import TrainState, build_train_step
 from repro.runtime.fault import FaultTolerantTrainer
-from repro.runtime.serve_loop import ServeEngine
+from repro.runtime.serve_loop import ServeEngine, TokenDomain
+from repro.runtime.scheduler import (
+    AdmissionDenied,
+    Request,
+    Scheduler,
+    SchedulerConfig,
+)
 
 __all__ = ["TrainState", "build_train_step", "FaultTolerantTrainer",
-           "ServeEngine"]
+           "ServeEngine", "TokenDomain",
+           "AdmissionDenied", "Request", "Scheduler", "SchedulerConfig"]

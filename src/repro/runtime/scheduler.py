@@ -1,0 +1,249 @@
+"""Serving scheduler — admission, continuous batching, fork admission.
+
+The engine/scheduler split mirrors production LLM servers: the
+:class:`~repro.runtime.serve_loop.ServeEngine` owns the device step and
+the per-sequence state domains (pages + token tails on the shared
+lifecycle kernel), while the :class:`Scheduler` decides *what runs when*:
+
+* **Admission** — requests wait in a FIFO until the page pool can hold
+  their prompt plus a decode reserve, so a burst cannot -ENOSPC a decode
+  step mid-flight.
+* **Continuous batching** — every step decodes all runnable sequences
+  (live, unfrozen, unfinished), chunked into device batches; new
+  requests join the running batch at page-granularity with no draining.
+* **Page-budget-aware fork admission** — ``fork`` is denied (not
+  crashed) when the pool cannot absorb the worst-case immediate cost of
+  ``n`` branches (one CoW'd tail page each plus the decode reserve).
+  Agentic exploration degrades gracefully under memory pressure instead
+  of taking down the serving loop.
+
+Branch bookkeeping is intentionally absent here: the scheduler tracks
+only which sequence ids it may decode, and asks the lifecycle kernel for
+liveness each step, so commits/aborts/invalidations performed by agents
+(directly or through :class:`~repro.core.runtime_api.BranchRuntime`)
+are observed without any scheduler-side state machine (DESIGN §3).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core.errors import BranchError
+from repro.core.lifecycle import BranchStatus
+from repro.runtime.serve_loop import ServeEngine
+
+
+class AdmissionDenied(BranchError):
+    """Raised when fork admission would overrun the page budget.
+
+    The -EAGAIN of the serving layer: the caller may retry after commits
+    or retirements recycle pages.
+    """
+
+
+@dataclass
+class SchedulerConfig:
+    max_batch: int = 8          # device batch width per decode dispatch
+    decode_reserve: int = 2     # pages kept free per runnable sequence
+    fork_cost_pages: int = 1    # worst-case immediate pages per new branch
+
+
+@dataclass
+class Request:
+    """One user request: a prompt plus a decode budget."""
+
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    seq: Optional[int] = None          # assigned at admission
+    finished: List[int] = field(default_factory=list)  # completed outputs
+
+
+class Scheduler:
+    """Admission + continuous batching over the engine's live branches."""
+
+    def __init__(self, engine: ServeEngine,
+                 config: Optional[SchedulerConfig] = None):
+        self.engine = engine
+        self.config = config or SchedulerConfig()
+        self._req_ids = itertools.count(0)
+        self._waiting: List[Request] = []
+        self._requests: Dict[int, Request] = {}
+        # every sequence the scheduler may decode, mapped to its request
+        self._seq_owner: Dict[int, int] = {}
+        self.steps = 0
+        self.tokens_generated = 0
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.engine.page_size)
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16) -> int:
+        """Queue a request; it is admitted when the page budget allows.
+
+        A request that could never fit the pool — even with it entirely
+        free — is rejected up front (``AdmissionDenied``) instead of
+        blocking the FIFO head and starving everything behind it.
+        """
+        need_min = (self._pages_for(len(prompt))
+                    + self.config.decode_reserve)
+        if need_min > self.engine.kv.num_pages:
+            raise AdmissionDenied(
+                f"prompt needs {need_min} pages but the pool only has "
+                f"{self.engine.kv.num_pages}; request can never be admitted")
+        req = Request(req_id=next(self._req_ids), prompt=list(prompt),
+                      max_new_tokens=max_new_tokens)
+        self._requests[req.req_id] = req
+        self._waiting.append(req)
+        return req.req_id
+
+    def admit(self) -> List[int]:
+        """Admit waiting requests in FIFO order while pages last."""
+        admitted: List[int] = []
+        while self._waiting:
+            req = self._waiting[0]
+            need = (self._pages_for(len(req.prompt))
+                    + self.config.decode_reserve)
+            if self.engine.kv.free_pages < need:
+                break   # FIFO: do not starve the head request
+            self._waiting.pop(0)
+            req.seq = self.engine.add_request(req.prompt)
+            self._seq_owner[req.seq] = req.req_id
+            admitted.append(req.req_id)
+        return admitted
+
+    # ------------------------------------------------------------------
+    # fork admission
+    # ------------------------------------------------------------------
+    def fork(self, seq: int, n: int) -> List[int]:
+        """Fork ``n`` exploration branches if the page budget allows.
+
+        Worst case each branch immediately CoW-faults its shared tail
+        page, and every runnable sequence still needs its decode
+        reserve; deny the fork (``AdmissionDenied``) rather than let a
+        later decode step hit -ENOSPC.
+        """
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        # post-fork runnable set: the parent freezes out, n children join
+        post_fork_runnable = len(self.runnable()) - 1 + n
+        need = (n * self.config.fork_cost_pages
+                + self.config.decode_reserve * post_fork_runnable)
+        if self.engine.kv.free_pages < need:
+            raise AdmissionDenied(
+                f"fork({seq}, n={n}) needs ~{need} free pages, "
+                f"have {self.engine.kv.free_pages} (-EAGAIN)")
+        children = self.engine.fork(seq, n)
+        owner = self._seq_owner[seq]
+        for c in children:
+            self._seq_owner[c] = owner
+        return children
+
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+    def _request_done(self, req: Request, seq: int) -> bool:
+        # kv.length == len(tokens) - 1 (last token pending), so produced
+        # count is O(1) host work — no token-list copy on the hot path
+        produced = self.engine.kv.length(seq) + 1 - len(req.prompt)
+        return produced >= req.max_new_tokens
+
+    def runnable(self) -> List[int]:
+        """Sequences that may decode this step.
+
+        Asks the lifecycle kernel directly: ACTIVE sequences run, FROZEN
+        origins wait for their children, and anything resolved by a
+        commit/abort/invalidation is dropped from tracking here.
+        """
+        out: List[int] = []
+        for seq in list(self._seq_owner):
+            status = self.engine.kv.status(seq)
+            if status is BranchStatus.ACTIVE:
+                out.append(seq)
+            elif status is not BranchStatus.FROZEN:
+                # resolved (committed / aborted / stale): stop tracking
+                self._seq_owner.pop(seq, None)
+        return out
+
+    def _retire(self, seq: int) -> None:
+        req = self._requests[self._seq_owner[seq]]
+        node = self.engine.kv.tree.node(seq)
+        if node.parent is None:
+            # a finished root request leaves the engine entirely
+            req.finished = self.engine.tokens(seq)
+            self.engine.release(seq)
+            self._seq_owner.pop(seq, None)
+        # a finished *branch* stays live: the agent decides commit/abort
+
+    def step(self, *, greedy: bool = True, temperature: float = 1.0,
+             key: Optional[jax.Array] = None) -> Dict[str, Any]:
+        """One scheduling round: admit, batch-decode, retire.
+
+        Returns counters for the serving loop / benchmarks.
+        """
+        admitted = self.admit()
+        batch = [s for s in self.runnable()
+                 if not self._request_done(
+                     self._requests[self._seq_owner[s]], s)]
+        decoded = 0
+        for lo in range(0, len(batch), self.config.max_batch):
+            group = batch[lo: lo + self.config.max_batch]
+            sub = None
+            if key is not None:
+                key, sub = jax.random.split(key)
+            self.engine.decode(group, greedy=greedy,
+                               temperature=temperature, key=sub)
+            decoded += len(group)
+        retired = 0
+        for seq in list(self._seq_owner):
+            status = self.engine.kv.status(seq)
+            if status is BranchStatus.ACTIVE and self._request_done(
+                    self._requests[self._seq_owner[seq]], seq):
+                self._retire(seq)
+                retired += int(seq not in self._seq_owner)
+        self.steps += 1
+        self.tokens_generated += decoded
+        return {
+            "admitted": len(admitted),
+            "batch": len(batch),
+            "decoded": decoded,
+            "retired": retired,
+            "waiting": len(self._waiting),
+            "running": len(self._seq_owner),
+        }
+
+    def run(self, max_steps: int = 1000, **decode_kw: Any) -> int:
+        """Step until no work remains; returns tokens generated."""
+        t0 = self.tokens_generated
+        for _ in range(max_steps):
+            st = self.step(**decode_kw)
+            if st["decoded"] == 0 and st["waiting"] == 0:
+                break
+        return self.tokens_generated - t0
+
+    # ------------------------------------------------------------------
+    def result(self, req_id: int) -> List[int]:
+        """Final token list of a retired request."""
+        return list(self._requests[req_id].finished)
+
+    def seq_of(self, req_id: int) -> int:
+        """The admitted root sequence of a request (its fork origin)."""
+        seq = self._requests[req_id].seq
+        if seq is None:
+            raise BranchError(f"request {req_id} not admitted yet")
+        return seq
+
+    def stats(self) -> Dict[str, Any]:
+        st = self.engine.stats()
+        st.update(steps=self.steps, tokens_generated=self.tokens_generated,
+                  waiting=len(self._waiting), running=len(self._seq_owner))
+        return st
+
+
+__all__ = ["AdmissionDenied", "Request", "Scheduler", "SchedulerConfig"]

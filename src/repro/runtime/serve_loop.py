@@ -1,4 +1,4 @@
-"""ServeEngine — continuous-batching serving with branchable paged KV.
+"""ServeEngine — branchable paged-KV engine (device step + state domains).
 
 The paper's serving workload as a first-class engine feature:
 
@@ -6,12 +6,24 @@ The paper's serving workload as a first-class engine feature:
   sequences hold block tables managed by :class:`KVBranchManager`.
 * ``fork(seq, n)`` creates N generation branches sharing every page
   (CoW); the first append to a shared tail page triggers a single-page
-  device copy (the CoW fault).
+  device copy (the CoW fault).  All pending CoW faults of a decode step
+  are serviced by **one** fused ``_copy_pages`` dispatch, not one jit
+  call per page.
 * ``commit(branch)`` promotes the branch into its parent and invalidates
   siblings, whose pages are recycled — first-commit-wins.
 * nesting: branches fork sub-branches (Tree-of-Thoughts style).
 * decode runs the **paged-attention** path per layer (Pallas kernel on
   TPU; the jnp gather oracle on CPU — same math).
+
+The engine does not implement a branch lifecycle of its own: its host
+token tails are a :class:`TokenDomain` attached to the KV manager's
+:class:`~repro.core.lifecycle.BranchTree`, so one kernel-level
+``commit``/``abort``/invalidation resolves pages *and* tokens atomically
+— a raced commit can no longer strand token tails (DESIGN §2).
+
+Admission, continuous batching and fork admission live in
+:mod:`repro.runtime.scheduler`; this module is only the device step plus
+the per-sequence state domains.
 
 Only attention-family archs use paged KV; SSM archs branch their
 recurrent state through the BranchStore instead (DESIGN §6).
@@ -19,10 +31,8 @@ recurrent state through the BranchStore instead (DESIGN §6).
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +67,6 @@ def paged_decode_step(
     b = tokens.shape[0]
     kvh, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
     h = embed_tokens(cfg, params, tokens)
-    batch_idx = jnp.arange(b)
 
     def body(h, xs):
         lp, kp, vp = xs
@@ -86,25 +95,91 @@ def paged_decode_step(
     return lm_head(cfg, params, h), k_pages, v_pages
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _copy_pages(pages: jax.Array, src: jax.Array, dst: jax.Array
-                ) -> jax.Array:
-    """CoW fault service: copy pages[:, src] -> pages[:, dst]."""
-    return pages.at[:, dst].set(pages[:, src])
+@partial(jax.jit, donate_argnums=(0, 1))
+def _copy_pages(k_pages: jax.Array, v_pages: jax.Array,
+                src: jax.Array, dst: jax.Array):
+    """Batched CoW fault service: pages[:, src] -> pages[:, dst].
+
+    ``src``/``dst`` are int32 vectors covering *every* pending CoW op of
+    a decode step, so the whole batch costs one device dispatch.  The
+    gather reads the pre-copy pool, so a page freed by one fault and
+    reallocated as another fault's destination still copies the right
+    bytes; destination indices are unique (each is freshly allocated) or
+    duplicated only as identical padding pairs.
+    """
+    return (k_pages.at[:, dst].set(k_pages[:, src]),
+            v_pages.at[:, dst].set(v_pages[:, src]))
+
+
+def _pad_pow2(src: List[int], dst: List[int]) -> tuple:
+    """Pad the CoW op list to a power-of-two bucket to bound recompiles.
+
+    Padding repeats the last real (src, dst) pair: duplicate scatter
+    indices then carry identical payloads, which is deterministic.
+    """
+    n = len(src)
+    m = 1
+    while m < n:
+        m *= 2
+    src = src + [src[-1]] * (m - n)
+    dst = dst + [dst[-1]] * (m - n)
+    return jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# token tails as a lifecycle domain
+# ---------------------------------------------------------------------------
+
+class TokenDomain:
+    """Host token tails plugged into the branch-lifecycle kernel.
+
+    The serving analogue of the paper's process-group domain: each live
+    sequence owns its generated-token list, and the kernel's hooks move
+    ownership on fork (copy), commit (child's tail replaces the
+    parent's) and abort/invalidate (tail dropped) — so losers of a
+    first-commit-wins race can never strand their tails.
+    """
+
+    def __init__(self) -> None:
+        self._tokens: Dict[int, List[int]] = {}
+
+    # -- BranchDomain hooks (called under the tree lock) ----------------
+    def on_fork(self, parent: int, children: List[int]) -> None:
+        base = self._tokens.get(parent)
+        if base is not None:
+            for c in children:
+                self._tokens[c] = list(base)
+
+    def on_commit(self, child: int, parent: int) -> None:
+        if child in self._tokens:
+            self._tokens[parent] = self._tokens.pop(child)
+
+    def on_abort(self, branch: int) -> None:
+        self._tokens.pop(branch, None)
+
+    def on_invalidate(self, branch: int) -> None:
+        self._tokens.pop(branch, None)
+
+    # -- accessors -------------------------------------------------------
+    def seed(self, seq: int, tokens: Sequence[int]) -> None:
+        self._tokens[seq] = list(tokens)
+
+    def get(self, seq: int) -> List[int]:
+        return self._tokens[seq]
+
+    def append(self, seq: int, token: int) -> None:
+        self._tokens[seq].append(token)
+
+    def __contains__(self, seq: int) -> bool:
+        return seq in self._tokens
+
+    def __len__(self) -> int:
+        return len(self._tokens)
 
 
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
-
-@dataclass
-class Branch:
-    """A generation branch handle (sequence id + host token tail)."""
-
-    seq: int
-    tokens: List[int]
-    parent: Optional["Branch"] = None
-
 
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, num_pages: int = 256,
@@ -126,7 +201,13 @@ class ServeEngine:
                  cfg.head_dim)
         self.k_pages = jnp.zeros(shape, dt)
         self.v_pages = jnp.zeros(shape, dt)
-        self._tokens: Dict[int, List[int]] = {}
+        # Token tails ride the same lifecycle kernel as the page tables:
+        # kv.commit/abort/invalidate resolves both domains atomically.
+        self.token_domain = TokenDomain()
+        self.kv.tree.attach(self.token_domain)
+        # CoW fault-service instrumentation (benchmarks read these)
+        self.cow_dispatches = 0   # fused _copy_pages device calls
+        self.cow_faults = 0       # individual page copies serviced
 
     # ------------------------------------------------------------------
     def add_request(self, prompt: Sequence[int]) -> int:
@@ -153,49 +234,55 @@ class ServeEngine:
                     k[:, lo:hi])
                 self.v_pages = self.v_pages.at[:, page, : hi - lo].set(
                     v[:, lo:hi])
-        self._tokens[sid] = prompt
+        self.token_domain.seed(sid, prompt)
         return sid
 
     # ------------------------------------------------------------------
-    # branch ops (the paper's lifecycle, KV domain)
+    # branch ops (the paper's lifecycle, resolved by the shared kernel)
     # ------------------------------------------------------------------
     def fork(self, seq: int, n: int) -> List[int]:
-        children = self.kv.fork(seq, n)
-        for c in children:
-            self._tokens[c] = list(self._tokens[seq])
-        return children
+        return self.kv.fork(seq, n)   # token tails copied by the hook
 
     def commit(self, seq: int) -> int:
-        parent = self.kv.commit(seq)
-        self._tokens[parent] = self._tokens.pop(seq)
-        return parent
+        return self.kv.commit(seq)    # tokens + pages promoted atomically
 
     def abort(self, seq: int) -> None:
         self.kv.abort(seq)
-        self._tokens.pop(seq, None)
+
+    def release(self, seq: int) -> None:
+        """Evict a finished/abandoned sequence, freeing every domain."""
+        self.kv.release(seq)
 
     # ------------------------------------------------------------------
+    def _service_cow(self, src: List[int], dst: List[int]) -> None:
+        """Service all pending CoW faults in one fused device dispatch."""
+        s, d = _pad_pow2(src, dst)
+        self.k_pages, self.v_pages = _copy_pages(
+            self.k_pages, self.v_pages, s, d)
+        self.cow_dispatches += 1
+        self.cow_faults += len(src)
+
     def decode(self, seq_ids: Sequence[int], *, greedy: bool = True,
                temperature: float = 1.0,
                key: Optional[jax.Array] = None) -> List[int]:
         """One token for each sequence (they decode as one batch)."""
         lengths_before = np.array([self.kv.length(s) for s in seq_ids],
                                   np.int32)
-        # host: reserve slots (may trigger CoW page copies)
+        # host: reserve slots; collect every CoW fault across the batch
         slots = []
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
         for s in seq_ids:
             (slot,) = self.kv.prepare_append(s, 1)
             for cow in slot.cow:
-                self.k_pages = _copy_pages(
-                    self.k_pages, jnp.int32(cow.src_page),
-                    jnp.int32(cow.dst_page))
-                self.v_pages = _copy_pages(
-                    self.v_pages, jnp.int32(cow.src_page),
-                    jnp.int32(cow.dst_page))
+                cow_src.append(cow.src_page)
+                cow_dst.append(cow.dst_page)
             slots.append(slot)
+        if cow_src:
+            self._service_cow(cow_src, cow_dst)
         bt, _ = self.kv.dense_block_tables(seq_ids, self.max_pages)
         last_tokens = jnp.asarray(
-            [[self._tokens[s][-1]] for s in seq_ids], jnp.int32)
+            [[self.token_domain.get(s)[-1]] for s in seq_ids], jnp.int32)
 
         logits, self.k_pages, self.v_pages = paged_decode_step(
             self.cfg, self.params, self.k_pages, self.v_pages,
@@ -212,11 +299,15 @@ class ServeEngine:
             nxt = jax.random.categorical(key, logits / temperature)
         out = [int(t) for t in np.asarray(nxt)]
         for s, t in zip(seq_ids, out):
-            self._tokens[s].append(t)
+            self.token_domain.append(s, t)
         return out
 
     def tokens(self, seq: int) -> List[int]:
-        return list(self._tokens[seq])
+        return list(self.token_domain.get(seq))
 
     def stats(self) -> Dict[str, int]:
-        return self.kv.stats()
+        st = self.kv.stats()
+        st["token_tails"] = len(self.token_domain)
+        st["cow_dispatches"] = self.cow_dispatches
+        st["cow_faults"] = self.cow_faults
+        return st

@@ -1,0 +1,218 @@
+"""BranchTree kernel: one lifecycle state machine for every domain.
+
+These tests exercise the kernel directly, with toy payload domains, to
+pin the semantics every real domain (store deltas, KV pages, serving
+token tails) relies on: first-commit-wins CAS, frozen origins, exclusive
+groups, recursive invalidation, idempotent cleanup hooks.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import BranchStatus, BranchTree
+from repro.core.errors import BranchStateError, StaleBranchError
+
+
+class DictDomain:
+    """Minimal payload domain: one value per branch, CoW on fork."""
+
+    def __init__(self):
+        self.data = {}
+        self.events = []
+
+    def on_fork(self, parent, children):
+        self.events.append(("fork", parent, tuple(children)))
+        for c in children:
+            self.data[c] = self.data.get(parent)
+
+    def on_commit(self, child, parent):
+        self.events.append(("commit", child, parent))
+        self.data[parent] = self.data.pop(child)
+
+    def on_abort(self, branch):
+        self.events.append(("abort", branch))
+        self.data.pop(branch, None)
+
+    def on_invalidate(self, branch):
+        self.events.append(("invalidate", branch))
+        self.data.pop(branch, None)
+
+
+@pytest.fixture
+def tree():
+    return BranchTree(freeze_on_fork=True)
+
+
+def test_first_commit_wins_bumps_epoch_and_invalidates(tree):
+    root = tree.create_root()
+    a, b, c = tree.fork(root, 3)
+    assert tree.commit(a) == root
+    assert tree.status(a) is BranchStatus.COMMITTED
+    assert tree.status(b) is BranchStatus.STALE
+    assert tree.status(c) is BranchStatus.STALE
+    with pytest.raises(StaleBranchError):
+        tree.commit(b)
+    assert tree.epoch(root) == 1
+
+
+def test_exclusive_group_shared_per_fork_batch(tree):
+    root = tree.create_root()
+    batch1 = tree.fork(root, 2)
+    g1 = {tree.node(b).group for b in batch1}
+    assert len(g1) == 1
+    tree.commit(batch1[0])
+    batch2 = tree.fork(root, 2)
+    g2 = {tree.node(b).group for b in batch2}
+    assert len(g2) == 1 and g1 != g2
+
+
+def test_freeze_on_fork_and_resume(tree):
+    root = tree.create_root()
+    a, b = tree.fork(root, 2)
+    assert tree.status(root) is BranchStatus.FROZEN
+    tree.abort(a)
+    assert tree.status(root) is BranchStatus.FROZEN  # b still live
+    tree.abort(b)
+    assert tree.status(root) is BranchStatus.ACTIVE  # all resolved
+
+
+def test_commit_unfreezes_parent(tree):
+    root = tree.create_root()
+    a, b = tree.fork(root, 2)
+    tree.commit(b)
+    assert tree.status(root) is BranchStatus.ACTIVE
+
+
+def test_no_freeze_tree_keeps_parent_active():
+    t = BranchTree(freeze_on_fork=False, allow_fork_resolved=True)
+    root = t.create_root()
+    (a,) = t.fork(root, 1)
+    assert t.status(root) is BranchStatus.ACTIVE
+    assert t.has_live_children(root)
+    t.commit(a)
+    # committed nodes remain forkable in allow_fork_resolved trees
+    t.fork(a, 1)
+    with pytest.raises(BranchStateError):
+        BranchTree(allow_fork_resolved=False).fork(0, 1)
+
+
+def test_recursive_invalidation_reaches_grandchildren(tree):
+    root = tree.create_root()
+    a, b = tree.fork(root, 2)
+    (g,) = tree.fork(b, 1)
+    tree.commit(a)
+    assert tree.status(b) is BranchStatus.STALE
+    assert tree.status(g) is BranchStatus.STALE
+
+
+def test_commit_with_live_children_rejected(tree):
+    root = tree.create_root()
+    (a,) = tree.fork(root, 1)
+    tree.fork(a, 2)
+    with pytest.raises(BranchStateError):
+        tree.commit(a)
+
+
+def test_root_cannot_commit(tree):
+    root = tree.create_root()
+    with pytest.raises(BranchStateError):
+        tree.commit(root)
+
+
+def test_domain_hooks_fire_in_order(tree):
+    dom = DictDomain()
+    tree.attach(dom)
+    root = tree.create_root()
+    dom.data[root] = "base"
+    a, b = tree.fork(root, 2)
+    assert dom.data[a] == dom.data[b] == "base"
+    dom.data[a] = "winner"
+    tree.commit(a)
+    assert dom.data[root] == "winner"
+    assert a not in dom.data           # moved, not copied
+    assert b not in dom.data           # invalidated payload reclaimed
+    kinds = [e[0] for e in dom.events]
+    assert kinds == ["fork", "commit", "invalidate"]
+
+
+def test_two_domains_resolve_atomically(tree):
+    d1, d2 = DictDomain(), DictDomain()
+    tree.attach(d1)
+    tree.attach(d2)
+    root = tree.create_root()
+    d1.data[root], d2.data[root] = "fs", "mem"
+    a, b = tree.fork(root, 2)
+    d1.data[a], d2.data[a] = "fs'", "mem'"
+    tree.commit(a)
+    # one kernel-level commit moved BOTH payloads; the loser lost both
+    assert (d1.data[root], d2.data[root]) == ("fs'", "mem'")
+    assert b not in d1.data and b not in d2.data
+
+
+def test_abort_after_estale_refires_idempotent_cleanup(tree):
+    dom = DictDomain()
+    tree.attach(dom)
+    root = tree.create_root()
+    a, b = tree.fork(root, 2)
+    tree.commit(a)
+    tree.abort(b)   # cleanup-after-ESTALE: allowed, idempotent
+    assert [e[0] for e in dom.events].count("invalidate") == 2
+    assert tree.status(b) is BranchStatus.STALE
+
+
+def test_invalidate_evicts_roots_and_subtrees(tree):
+    dom = DictDomain()
+    tree.attach(dom)
+    root = tree.create_root()
+    dom.data[root] = "x"
+    a, b = tree.fork(root, 2)
+    tree.invalidate(root, status=BranchStatus.ABORTED)
+    assert tree.status(root) is BranchStatus.ABORTED
+    assert tree.status(a) is BranchStatus.STALE
+    assert tree.status(b) is BranchStatus.STALE
+    assert not dom.data
+
+
+def test_concurrent_commits_single_winner(tree):
+    root = tree.create_root()
+    n = 8
+    branches = tree.fork(root, n)
+    results = [None] * n
+    barrier = threading.Barrier(n)
+
+    def racer(i, bid):
+        barrier.wait()
+        try:
+            tree.commit(bid)
+            results[i] = "won"
+        except StaleBranchError:
+            results[i] = "stale"
+
+    ts = [threading.Thread(target=racer, args=(i, b))
+          for i, b in enumerate(branches)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert results.count("won") == 1
+    assert results.count("stale") == n - 1
+    assert tree.epoch(root) == 1
+
+
+def test_lazy_stale_detection_via_epoch(tree):
+    root = tree.create_root()
+    a, b = tree.fork(root, 2)
+    # bypass eager marking by rewinding b's status (simulates a reader
+    # that raced the winner's invalidation sweep)
+    tree.commit(a)
+    tree.node(b).status = BranchStatus.ACTIVE
+    with pytest.raises(StaleBranchError):
+        tree.check_live(b)
+    assert tree.status(b) is BranchStatus.STALE
+
+
+def test_unknown_branch_raises(tree):
+    with pytest.raises(BranchStateError):
+        tree.node(999)
+    assert not tree.is_live(999)

@@ -4,6 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep (pip install repro[test]); skip, don't abort "
+           "collection")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -6,8 +6,13 @@ marks siblings stale.  Any divergence between the CoW chain-resolution
 implementations and this model is a bug in the system's invariants.
 """
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dep (pip install repro[test]); skip, don't abort "
+           "collection")
+import hypothesis.strategies as st
 from hypothesis import HealthCheck, given, settings
 
 from repro.core import BranchStatus, BranchStore

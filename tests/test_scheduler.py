@@ -1,0 +1,256 @@
+"""Scheduler + cross-domain lifecycle at the serving layer.
+
+Covers the engine/scheduler split (admission, continuous batching,
+page-budget-aware fork admission), the fused CoW fault service (one
+device dispatch per decode step), and cross-domain atomicity: a raced
+``BranchRuntime.commit`` where the KV domain loses must strand no token
+tails and leak no page refcounts.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import BranchRuntime, BranchStore, BR_KV, BR_STATE
+from repro.core.branch import root_context
+from repro.core.errors import StaleBranchError
+from repro.models.model import Model
+from repro.runtime.scheduler import AdmissionDenied, Scheduler, SchedulerConfig
+from repro.runtime.serve_loop import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def fresh_engine(engine_setup, **kw):
+    cfg, model, params = engine_setup
+    kw.setdefault("num_pages", 128)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_pages_per_seq", 16)
+    return ServeEngine(model, params, **kw)
+
+
+def pages_for(eng, n_tokens):
+    return -(-n_tokens // eng.page_size)
+
+
+# ---------------------------------------------------------------------------
+# fused CoW fault service
+# ---------------------------------------------------------------------------
+
+def test_cow_faults_serviced_in_one_dispatch(engine_setup):
+    eng = fresh_engine(engine_setup)
+    root = eng.add_request([7, 8, 9])     # 2 cached tokens: mid-page tail
+    branches = eng.fork(root, 3)
+    d0, f0 = eng.cow_dispatches, eng.cow_faults
+    eng.decode(branches)
+    # every sibling CoW-faults the shared tail page, all in ONE dispatch
+    assert eng.cow_faults == f0 + 3
+    assert eng.cow_dispatches == d0 + 1
+    # after the fault the tails are private: no further dispatches
+    eng.decode(branches)
+    assert eng.cow_dispatches == d0 + 1
+
+
+def test_cow_batched_equals_unbatched_decode(engine_setup):
+    prompt = [11, 22, 33]
+    ctrl = fresh_engine(engine_setup)
+    c = ctrl.add_request(prompt)
+    want = [ctrl.decode([c])[0] for _ in range(3)]
+
+    eng = fresh_engine(engine_setup)
+    root = eng.add_request(prompt)
+    b1, b2, b3 = eng.fork(root, 3)
+    for _ in range(3):
+        eng.decode([b1, b2, b3])          # fused CoW on the first step
+    assert eng.tokens(b1)[3:] == eng.tokens(b2)[3:] == want
+
+
+# ---------------------------------------------------------------------------
+# scheduler: admission + continuous batching + retirement
+# ---------------------------------------------------------------------------
+
+def test_continuous_batching_matches_unscheduled_decode(engine_setup):
+    ctrl = fresh_engine(engine_setup)
+    c = ctrl.add_request([1, 2, 3])
+    want = [ctrl.decode([c])[0] for _ in range(3)]
+
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng, SchedulerConfig(max_batch=4))
+    r1 = sched.submit([1, 2, 3], max_new_tokens=3)
+    r2 = sched.submit([9, 8, 7, 6], max_new_tokens=5)
+    produced = sched.run(max_steps=20)
+    assert produced == 3 + 5
+    assert sched.result(r1) == [1, 2, 3] + want
+    assert len(sched.result(r2)) == 4 + 5
+    # retirement released every page and token tail
+    st = sched.stats()
+    assert st["sequences_live"] == 0
+    assert st["token_tails"] == 0
+    assert st["pages_free"] == st["pages_total"]
+
+
+def test_admission_waits_for_page_budget(engine_setup):
+    eng = fresh_engine(engine_setup, num_pages=5)
+    sched = Scheduler(eng, SchedulerConfig(max_batch=4, decode_reserve=2))
+    r1 = sched.submit(list(range(1, 9)), max_new_tokens=2)   # 2 pages
+    r2 = sched.submit(list(range(11, 19)), max_new_tokens=2)
+    st = sched.step()
+    assert st["admitted"] == 1                # r2 must wait: 3 < 2+2 free
+    assert st["waiting"] == 1
+    sched.run(max_steps=20)
+    assert len(sched.result(r1)) == 10
+    assert len(sched.result(r2)) == 10        # admitted after r1 retired
+
+
+def test_fork_admission_page_budget(engine_setup):
+    eng = fresh_engine(engine_setup, num_pages=8)
+    sched = Scheduler(eng, SchedulerConfig(decode_reserve=1))
+    rid = sched.submit(list(range(1, 9)), max_new_tokens=64)
+    sched.admit()
+    seq = sched.seq_of(rid)
+    with pytest.raises(AdmissionDenied):
+        sched.fork(seq, 20)                   # would overrun the pool
+    children = sched.fork(seq, 2)
+    # frozen origin waits; children join the running batch
+    assert set(sched.runnable()) == set(children)
+
+
+def test_scheduler_observes_kernel_commit(engine_setup):
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng, SchedulerConfig(max_batch=8))
+    rid = sched.submit([2, 4, 6, 8], max_new_tokens=64)
+    sched.admit()
+    seq = sched.seq_of(rid)
+    b1, b2 = sched.fork(seq, 2)
+    sched.step()
+    eng.commit(b1)        # kernel-level first-commit-wins
+    # next round: loser + winner dropped, parent resumed and runnable
+    assert sched.runnable() == [seq]
+    sched.step()
+    assert len(eng.tokens(seq)) == 6  # prompt + forked step + parent step
+
+
+# ---------------------------------------------------------------------------
+# cross-domain atomicity (store + KV + token tails)
+# ---------------------------------------------------------------------------
+
+def test_raced_runtime_commit_kv_loser_strands_nothing(engine_setup):
+    """If the KV domain already lost a kernel-level race, the composite
+    commit must lose atomically: no stranded token tails, no leaked page
+    refcounts."""
+    eng = fresh_engine(engine_setup)
+    store = BranchStore({"plan": b"root"})
+    runtime = BranchRuntime(store, eng.kv)
+    root_ctx = root_context(store)
+
+    seq = eng.add_request([5, 6, 7, 8, 9])
+    eng.decode([seq])
+    h1, h2 = runtime.create(root_ctx, 2, flags=BR_STATE | BR_KV,
+                            kv_seqs=[seq])
+    c1, c2 = h1.kv_seqs[seq], h2.kv_seqs[seq]
+    eng.decode([c1, c2])
+
+    eng.commit(c2)                      # sibling wins at the kernel level
+    winner_tokens = eng.tokens(seq)
+    with pytest.raises(StaleBranchError):
+        runtime.commit(h1)              # composite commit loses everywhere
+
+    st = eng.stats()
+    assert st["token_tails"] == 1       # only the promoted root tail
+    assert st["sequences_live"] == 1
+    used = st["pages_total"] - st["pages_free"]
+    assert used == pages_for(eng, eng.kv.length(seq))  # no leaked refs
+    assert eng.tokens(seq) == winner_tokens
+    assert h1._resolved                 # loser fully unwound
+    assert not h1.state.is_active
+
+
+def test_impossible_request_rejected_at_submit(engine_setup):
+    eng = fresh_engine(engine_setup, num_pages=4)
+    sched = Scheduler(eng, SchedulerConfig(decode_reserve=2))
+    with pytest.raises(AdmissionDenied):
+        sched.submit(list(range(100)))   # can never fit the pool
+    # the FIFO head is not blocked: a feasible request still flows
+    rid = sched.submit([1, 2, 3], max_new_tokens=1)
+    sched.run(max_steps=4)
+    assert len(sched.result(rid)) == 4
+
+
+def test_frozen_kv_child_refused_before_state_commit():
+    """A composite commit whose KV branch has nested live children must
+    refuse up front — not half-commit the state domain."""
+    from repro.core import KVBranchManager
+    from repro.core.errors import BranchStateError
+
+    store = BranchStore({"plan": b"root"})
+    kv = KVBranchManager(num_pages=16, page_size=4)
+    runtime = BranchRuntime(store, kv)
+    root_ctx = root_context(store)
+    seq = kv.new_seq(length=4)
+    (h,) = runtime.create(root_ctx, 1, flags=BR_STATE | BR_KV,
+                          kv_seqs=[seq])
+    kv.fork(h.kv_seqs[seq], 2)           # nested children freeze the branch
+    with pytest.raises(BranchStateError):
+        runtime.commit(h)
+    # nothing half-committed: state branch still live, store unchanged
+    assert h.state.is_active
+    assert not h._resolved
+    assert root_ctx.read("plan") == b"root"
+
+
+def test_state_cas_loss_unwinds_kv_domain():
+    """If the *store* domain loses the epoch CAS, the composite commit
+    must also lose the KV domain: no live forked sequences survive."""
+    from repro.core import KVBranchManager
+
+    store = BranchStore({"plan": b"root"})
+    kv = KVBranchManager(num_pages=16, page_size=4)
+    runtime = BranchRuntime(store, kv)
+    root_ctx = root_context(store)
+    seq = kv.new_seq(length=4)
+
+    (h_kv,) = runtime.create(root_ctx, 1, flags=BR_STATE | BR_KV,
+                             kv_seqs=[seq])
+    kv.prepare_append(h_kv.kv_seqs[seq], 3)
+    (h_state,) = runtime.create(root_ctx, 1)   # state-only sibling
+    runtime.commit(h_state)                    # bumps the store epoch
+    with pytest.raises(StaleBranchError):
+        runtime.commit(h_kv)
+    assert h_kv._resolved
+    assert not kv.is_live(h_kv.kv_seqs[seq])   # pages unwound, not stranded
+    st = kv.stats()
+    assert st["sequences_live"] == 1           # only the original root seq
+    assert st["pages_total"] - st["pages_free"] == 1  # ceil(4/4) pages
+
+
+def test_raced_runtime_commits_store_decides_once(engine_setup):
+    """Two handles race through the runtime itself: the loser raises
+    -ESTALE and every domain (store delta, pages, tokens) is reclaimed."""
+    eng = fresh_engine(engine_setup)
+    store = BranchStore({"plan": b"root"})
+    runtime = BranchRuntime(store, eng.kv)
+    root_ctx = root_context(store)
+
+    seq = eng.add_request([1, 3, 5, 7])
+    h1, h2 = runtime.create(root_ctx, 2, flags=BR_STATE | BR_KV,
+                            kv_seqs=[seq])
+    eng.decode([h1.kv_seqs[seq], h2.kv_seqs[seq]])
+    h2.state.write("plan", b"h2-wins")
+    runtime.commit(h2)
+    with pytest.raises(StaleBranchError):
+        runtime.commit(h1)
+
+    assert root_ctx.read("plan") == b"h2-wins"
+    st = eng.stats()
+    assert st["token_tails"] == 1
+    assert st["sequences_live"] == 1
+    used = st["pages_total"] - st["pages_free"]
+    assert used == pages_for(eng, eng.kv.length(seq))
