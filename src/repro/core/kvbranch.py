@@ -139,6 +139,14 @@ class KVBranchManager:
     def on_invalidate(self, branch: int) -> None:
         self._release_pages(branch)
 
+    def on_reap(self, branch: int) -> None:
+        # The kernel forgot this id: drop the payload *entries*, not just
+        # their contents (host memory must not grow with request count).
+        table = self._tables.pop(branch, None)
+        if table:
+            self._decref(table)
+        self._lengths.pop(branch, None)
+
     def _release_pages(self, branch: int) -> None:
         table = self._tables.get(branch)
         if table:
@@ -198,25 +206,77 @@ class KVBranchManager:
                     f"sequence {seq_id} has live children and is frozen")
             table = self._tables[seq_id]
             slots: List[AppendSlot] = []
-            for _ in range(n_tokens):
-                offset = self._lengths[seq_id] % self.page_size
-                cow: Tuple[CowOp, ...] = ()
-                if offset == 0:
-                    # new page needed
-                    page = self._alloc_page()
-                    table.append(page)
-                else:
-                    page = table[-1]
-                    if self._refcount[page] > 1:
-                        # shared tail page: copy-on-write
-                        new_page = self._alloc_page()
-                        cow = (CowOp(src_page=page, dst_page=new_page),)
-                        self._decref([page])
-                        table[-1] = new_page
-                        page = new_page
-                self._lengths[seq_id] += 1
-                slots.append(AppendSlot(page=page, offset=offset, cow=cow))
+            try:
+                for _ in range(n_tokens):
+                    offset = self._lengths[seq_id] % self.page_size
+                    cow: Tuple[CowOp, ...] = ()
+                    if offset == 0:
+                        # new page needed
+                        page = self._alloc_page()
+                        table.append(page)
+                    else:
+                        page = table[-1]
+                        if self._refcount[page] > 1:
+                            # shared tail page: copy-on-write
+                            new_page = self._alloc_page()
+                            cow = (CowOp(src_page=page, dst_page=new_page),)
+                            self._decref([page])
+                            table[-1] = new_page
+                            page = new_page
+                    self._lengths[seq_id] += 1
+                    slots.append(AppendSlot(page=page, offset=offset,
+                                            cow=cow))
+            except MemoryError:
+                # -ENOSPC midway: earlier tokens of this call mutated the
+                # table/length — undo them so the caller sees all or
+                # nothing (length == tokens - 1 stays intact).
+                self._undo_slots(seq_id, slots)
+                raise
             return slots
+
+    def _undo_slots(self, seq_id: int, slots: Sequence[AppendSlot]) -> None:
+        """Reverse the metadata mutations of reserved-but-unused slots.
+
+        Only legal before any device write consumed the slots: CoW page
+        copies and KV writes happen strictly after slot reservation, so
+        rolling back tables/lengths/refcounts here leaves no device state
+        referencing the undone pages.
+        """
+        table = self._tables[seq_id]
+        for slot in reversed(slots):
+            self._lengths[seq_id] -= 1
+            if slot.cow:
+                (op,) = slot.cow
+                self._incref([op.src_page])
+                self._decref([op.dst_page])   # freshly allocated -> freed
+                table[-1] = op.src_page
+            elif slot.offset == 0:
+                table.pop()
+                self._decref([slot.page])
+
+    def prepare_append_batch(
+        self, seq_ids: Sequence[int], n_tokens: int = 1
+    ) -> List[List[AppendSlot]]:
+        """All-or-nothing slot reservation across a decode batch.
+
+        Either every sequence gets its slots or *no* metadata is mutated:
+        if the pool exhausts (or a sequence turns out frozen/stale) after
+        earlier batch members were prepared, their mutations — including
+        speculative CoW tail-page swaps whose device copy has not run —
+        are rolled back before the error propagates.  This turns a
+        mid-batch -ENOSPC into a clean, retryable -EAGAIN instead of
+        silent KV corruption of earlier batch members.
+        """
+        with self._tree.lock:
+            done: List[Tuple[int, List[AppendSlot]]] = []
+            try:
+                for sid in seq_ids:
+                    done.append((sid, self.prepare_append(sid, n_tokens)))
+            except Exception:
+                for sid, slots in reversed(done):
+                    self._undo_slots(sid, slots)
+                raise
+            return [slots for _, slots in done]
 
     def commit(self, seq_id: int) -> int:
         """First-commit-wins: promote this child's table into the parent.
@@ -232,8 +292,16 @@ class KVBranchManager:
         self._tree.abort(seq_id)
 
     def release(self, seq_id: int) -> None:
-        """Free a root/active sequence outright (serving-slot eviction)."""
-        self._tree.invalidate(seq_id, status=BranchStatus.ABORTED)
+        """Free a root/active sequence outright (serving-slot eviction).
+
+        The subtree is invalidated and then *reaped*: lifecycle nodes and
+        payload entries (tables, lengths, attached-domain dicts) are
+        dropped, so a long-running serving loop does not accumulate host
+        state for retired requests.
+        """
+        with self._tree.lock:
+            self._tree.invalidate(seq_id, status=BranchStatus.ABORTED)
+            self._tree.reap(seq_id)
 
     # ------------------------------------------------------------------
     # dense views for the device step

@@ -110,6 +110,15 @@ class BranchDomain(Protocol):
         (eagerly by the winner, again by a caller's abort-after-ESTALE).
         """
 
+    def on_reap(self, branch: int) -> None:
+        """Forget a reaped branch's payload *entry* entirely (GC).
+
+        Fired when :meth:`BranchTree.reap` removes a fully-resolved node
+        from the tree; the id ceases to exist afterwards, so the domain
+        must drop the key itself, not just empty the value.  Optional:
+        domains that do not define the hook are skipped.
+        """
+
 
 class BranchTree:
     """Thread-safe branch lifecycle shared by every state domain.
@@ -348,6 +357,45 @@ class BranchTree:
         node.status = status
         for domain in self._domains:
             domain.on_invalidate(node.branch_id)
+
+    def reap(self, branch_id: int) -> int:
+        """Garbage-collect a fully-resolved subtree from the kernel.
+
+        Resolved nodes are kept so callers can observe COMMITTED / STALE
+        / ABORTED outcomes, but in a long-running serving loop — where
+        every request and fork allocates fresh ids — that history grows
+        without bound.  Once a subtree can no longer transition (no LIVE
+        member), the serving layer reaps it: every node is removed from
+        the tree, unlinked from its parent, and each domain drops its
+        payload entry via ``on_reap``.  Returns the number of nodes
+        removed; 0 (and no change) if the id is unknown or the subtree
+        still has a live member.
+        """
+        with self.lock:
+            if branch_id not in self._nodes:
+                return 0
+            members: List[BranchNode] = []
+            stack = [self._nodes[branch_id]]
+            while stack:
+                cur = stack.pop()
+                # status() applies the lazy -ESTALE check, so a node that
+                # merely *looks* ACTIVE after a sibling commit still reaps
+                if self.status(cur.branch_id) in LIVE:
+                    return 0
+                members.append(cur)
+                stack.extend(self._nodes[c] for c in cur.children)
+            root = self._nodes[branch_id]
+            if root.parent is not None and root.parent in self._nodes:
+                siblings = self._nodes[root.parent].children
+                if branch_id in siblings:
+                    siblings.remove(branch_id)
+            for node in reversed(members):   # children before parents
+                del self._nodes[node.branch_id]
+                for domain in self._domains:
+                    hook = getattr(domain, "on_reap", None)
+                    if hook is not None:
+                        hook(node.branch_id)
+            return len(members)
 
     def _maybe_resume_parent(self, node: BranchNode) -> None:
         if not self.freeze_on_fork or node.parent is None:

@@ -24,8 +24,9 @@ Flags mirror Listing 1:
 * ``BR_STATE``  (paper BR_FS, required) — fork the pytree store.
 * ``BR_KV``     (paper BR_MEMORY)       — fork device generation state.
 * ``BR_ISOLATE``                        — enforce that a context cannot
-  address a sibling's handles (checked at the API boundary; inside one
-  SPMD program isolation is structural).
+  address a sibling's handles (checked at the ``BranchHandle.group``
+  accessor, the one API surface exposing siblings; inside one SPMD
+  program isolation is otherwise structural).
 * ``BR_CLOSE_FDS``                      — drop inherited open handles
   (the context re-opens leaves through its own chain).
 """
@@ -34,7 +35,7 @@ from __future__ import annotations
 
 import contextlib
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.branch import BranchContext
 from repro.core.errors import BranchError, BranchStateError, StaleBranchError
@@ -59,15 +60,29 @@ class BranchHandle:
     index: int                       # 1..N, the paper's branch index
     state: Optional[BranchContext]   # BR_STATE domain
     kv_seqs: Dict[int, int] = field(default_factory=dict)  # parent seq -> forked seq
-    group: Sequence["BranchHandle"] = ()
     flags: int = BR_STATE
     _resolved: bool = False
+    _group: Tuple["BranchHandle", ...] = ()
 
     def _sibling_guard(self, other: "BranchHandle") -> None:
         if self.flags & BR_ISOLATE and other is not self:
             raise BranchError(
                 "BR_ISOLATE: sibling branch handles are not addressable"
             )
+
+    @property
+    def group(self) -> Tuple["BranchHandle", ...]:
+        """Every handle of this BR_CREATE set (the exclusive group).
+
+        This is the API boundary where BR_ISOLATE is enforced: a handle
+        created with the flag cannot address its siblings, so accessing
+        the group (beyond a singleton, which is just ``self``) raises
+        ``BranchError`` — an isolated context only ever holds its own
+        view of each domain.
+        """
+        for h in self._group:
+            self._sibling_guard(h)
+        return self._group
 
 
 class BranchRuntime:
@@ -132,7 +147,7 @@ class BranchRuntime:
                 for i in range(n_branches)
             ]
             for h in handles:
-                h.group = tuple(handles)
+                h._group = tuple(handles)
             return handles
         except Exception:
             # kernel-side cleanup on failure: unwind in reverse order

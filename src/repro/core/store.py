@@ -123,6 +123,9 @@ class BranchStore:
     def on_invalidate(self, branch: int) -> None:
         self._deltas[branch] = {}
 
+    def on_reap(self, branch: int) -> None:
+        self._deltas.pop(branch, None)
+
     # ------------------------------------------------------------------
     # lifecycle: fork / commit / abort (delegated to the kernel)
     # ------------------------------------------------------------------
@@ -148,6 +151,16 @@ class BranchStore:
     def abort(self, branch_id: int) -> None:
         """Discard the branch's delta; siblings remain valid.  O(1)."""
         self._tree.abort(branch_id)
+
+    def reap(self, branch_id: int) -> int:
+        """GC a fully-resolved subtree (nodes + delta entries).
+
+        Opt-in for the store: a COMMITTED interior node normally stays
+        forkable (``allow_fork_resolved``) and resolvable in read
+        chains, so only reap subtrees the caller will never address
+        again (e.g. after an exploration round fully resolves).
+        """
+        return self._tree.reap(branch_id)
 
     # ------------------------------------------------------------------
     # namespace ops (the "filesystem" interface)

@@ -5,29 +5,38 @@ The engine/scheduler split mirrors production LLM servers: the
 the per-sequence state domains (pages + token tails on the shared
 lifecycle kernel), while the :class:`Scheduler` decides *what runs when*:
 
-* **Admission** — requests wait in a FIFO until the page pool can hold
-  their prompt plus a decode reserve, so a burst cannot -ENOSPC a decode
-  step mid-flight.
+* **Admission** — requests wait in a FIFO behind a worst-case page
+  **reservation ledger**: a request is admitted only when the pool can
+  hold ``pages_for(prompt + max_new_tokens)`` on top of every reservation
+  already outstanding, so an admitted request can always decode to
+  completion — the pool cannot -ENOSPC mid-flight.  A request whose
+  worst case exceeds the pool, or the per-sequence block-table limit,
+  can never run and is rejected at ``submit`` (``AdmissionDenied``).
 * **Continuous batching** — every step decodes all runnable sequences
   (live, unfrozen, unfinished), chunked into device batches; new
   requests join the running batch at page-granularity with no draining.
 * **Page-budget-aware fork admission** — ``fork`` is denied (not
-  crashed) when the pool cannot absorb the worst-case immediate cost of
-  ``n`` branches (one CoW'd tail page each plus the decode reserve).
-  Agentic exploration degrades gracefully under memory pressure instead
-  of taking down the serving loop.
+  crashed) when the ledger cannot absorb the worst-case cost of ``n``
+  branches (one CoW'd tail page each plus every page the branch may
+  still append before its request's decode budget runs out).  Agentic
+  exploration degrades gracefully under memory pressure (-EAGAIN)
+  instead of taking down the serving loop.
 
 Branch bookkeeping is intentionally absent here: the scheduler tracks
-only which sequence ids it may decode, and asks the lifecycle kernel for
-liveness each step, so commits/aborts/invalidations performed by agents
-(directly or through :class:`~repro.core.runtime_api.BranchRuntime`)
-are observed without any scheduler-side state machine (DESIGN §3).
+only which sequence ids it may decode (and their reservations), and asks
+the lifecycle kernel for liveness each step, so commits/aborts/
+invalidations performed by agents (directly or through
+:class:`~repro.core.runtime_api.BranchRuntime`) are observed without any
+scheduler-side state machine (DESIGN §3).  Subtrees that resolve are
+*reaped* from the kernel once the scheduler stops tracking them, so a
+long-running loop does not accumulate lifecycle nodes or payload
+entries for retired work.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -38,18 +47,17 @@ from repro.runtime.serve_loop import ServeEngine
 
 
 class AdmissionDenied(BranchError):
-    """Raised when fork admission would overrun the page budget.
+    """Raised when admission would overrun the page budget.
 
     The -EAGAIN of the serving layer: the caller may retry after commits
-    or retirements recycle pages.
+    or retirements recycle pages (except for requests rejected at
+    ``submit``, which can *never* fit and should be resized).
     """
 
 
 @dataclass
 class SchedulerConfig:
     max_batch: int = 8          # device batch width per decode dispatch
-    decode_reserve: int = 2     # pages kept free per runnable sequence
-    fork_cost_pages: int = 1    # worst-case immediate pages per new branch
 
 
 @dataclass
@@ -59,8 +67,8 @@ class Request:
     req_id: int
     prompt: List[int]
     max_new_tokens: int
+    worst_pages: int = 0               # pages_for(prompt + max_new_tokens)
     seq: Optional[int] = None          # assigned at admission
-    finished: List[int] = field(default_factory=list)  # completed outputs
 
 
 class Scheduler:
@@ -75,6 +83,11 @@ class Scheduler:
         self._requests: Dict[int, Request] = {}
         # every sequence the scheduler may decode, mapped to its request
         self._seq_owner: Dict[int, int] = {}
+        # worst-case pages each tracked sequence may still hold from the
+        # pool; the sum over all tracked sequences never exceeds the pool
+        self._reserved: Dict[int, int] = {}
+        # finished token lists, claimed one-shot via result()
+        self._results: Dict[int, List[int]] = {}
         self.steps = 0
         self.tokens_generated = 0
 
@@ -84,37 +97,46 @@ class Scheduler:
     def _pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.engine.page_size)
 
+    def _pages_reserved(self) -> int:
+        return sum(self._reserved.values())
+
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16) -> int:
         """Queue a request; it is admitted when the page budget allows.
 
-        A request that could never fit the pool — even with it entirely
-        free — is rejected up front (``AdmissionDenied``) instead of
-        blocking the FIFO head and starving everything behind it.
+        A request that could never run to completion — its worst case
+        (prompt + full decode budget) exceeds the pool even entirely
+        free, or the per-sequence block-table limit — is rejected up
+        front (``AdmissionDenied``) instead of blocking the FIFO head or
+        blowing up a later decode step.
         """
-        need_min = (self._pages_for(len(prompt))
-                    + self.config.decode_reserve)
-        if need_min > self.engine.kv.num_pages:
+        worst = self._pages_for(len(prompt) + max_new_tokens)
+        if worst > self.engine.kv.num_pages:
             raise AdmissionDenied(
-                f"prompt needs {need_min} pages but the pool only has "
-                f"{self.engine.kv.num_pages}; request can never be admitted")
+                f"request needs up to {worst} pages but the pool only has "
+                f"{self.engine.kv.num_pages}; it can never be admitted")
+        if worst > self.engine.max_pages:
+            raise AdmissionDenied(
+                f"request needs up to {worst} pages but a sequence's block "
+                f"table holds at most {self.engine.max_pages}; it can "
+                "never decode to completion")
         req = Request(req_id=next(self._req_ids), prompt=list(prompt),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens, worst_pages=worst)
         self._requests[req.req_id] = req
         self._waiting.append(req)
         return req.req_id
 
     def admit(self) -> List[int]:
-        """Admit waiting requests in FIFO order while pages last."""
+        """Admit waiting requests in FIFO order while reservations fit."""
         admitted: List[int] = []
         while self._waiting:
             req = self._waiting[0]
-            need = (self._pages_for(len(req.prompt))
-                    + self.config.decode_reserve)
-            if self.engine.kv.free_pages < need:
+            budget = self.engine.kv.num_pages - self._pages_reserved()
+            if req.worst_pages > budget:
                 break   # FIFO: do not starve the head request
             self._waiting.pop(0)
             req.seq = self.engine.add_request(req.prompt)
             self._seq_owner[req.seq] = req.req_id
+            self._reserved[req.seq] = req.worst_pages
             admitted.append(req.req_id)
         return admitted
 
@@ -124,25 +146,28 @@ class Scheduler:
     def fork(self, seq: int, n: int) -> List[int]:
         """Fork ``n`` exploration branches if the page budget allows.
 
-        Worst case each branch immediately CoW-faults its shared tail
-        page, and every runnable sequence still needs its decode
-        reserve; deny the fork (``AdmissionDenied``) rather than let a
-        later decode step hit -ENOSPC.
+        Worst case each branch CoW-faults its shared tail page and then
+        grows its table from the fork point to the request's full decode
+        budget; deny the fork (``AdmissionDenied``) rather than let a
+        later decode step hit -ENOSPC.  The frozen origin keeps its own
+        reservation (it holds its pages and resumes when the children
+        resolve), so shared pages are never double-booked.
         """
         if seq not in self._seq_owner:
             raise BranchError(f"sequence {seq} is not scheduled here")
-        # post-fork runnable set: the parent freezes out, n children join
-        post_fork_runnable = len(self.runnable()) - 1 + n
-        need = (n * self.config.fork_cost_pages
-                + self.config.decode_reserve * post_fork_runnable)
-        if self.engine.kv.free_pages < need:
+        req = self._requests[self._seq_owner[seq]]
+        table_len = len(self.engine.kv.block_table(seq))
+        child_cost = req.worst_pages - table_len + 1
+        budget = self.engine.kv.num_pages - self._pages_reserved()
+        if n * child_cost > budget:
             raise AdmissionDenied(
-                f"fork({seq}, n={n}) needs ~{need} free pages, "
-                f"have {self.engine.kv.free_pages} (-EAGAIN)")
+                f"fork({seq}, n={n}) needs up to {n * child_cost} free "
+                f"pages, budget is {budget} (-EAGAIN)")
         children = self.engine.fork(seq, n)
         owner = self._seq_owner[seq]
         for c in children:
             self._seq_owner[c] = owner
+            self._reserved[c] = child_cost
         return children
 
     # ------------------------------------------------------------------
@@ -152,33 +177,71 @@ class Scheduler:
         # kv.length == len(tokens) - 1 (last token pending), so produced
         # count is O(1) host work — no token-list copy on the hot path
         produced = self.engine.kv.length(seq) + 1 - len(req.prompt)
-        return produced >= req.max_new_tokens
+        if produced >= req.max_new_tokens:
+            return True
+        # belt-and-suspenders: stop before the next append could overflow
+        # the per-sequence block table (submit() makes this unreachable
+        # for its own requests)
+        return (self._pages_for(self.engine.kv.length(seq) + 1)
+                > self.engine.max_pages)
+
+    def _untrack(self, seq: int) -> None:
+        rid = self._seq_owner.pop(seq, None)
+        self._reserved.pop(seq, None)
+        if rid is not None:
+            req = self._requests.get(rid)
+            if req is not None and req.seq == seq:
+                # the request's *root* resolved without retiring (evicted
+                # or invalidated): it can never finish — drop it outright
+                self._requests.pop(rid, None)
+
+    def _drop(self, seq: int) -> None:
+        """Stop tracking a sequence: free its reservation, GC its nodes."""
+        self._untrack(seq)
+        if self.engine.kv.tree.reap(seq):
+            # the reap removes the whole resolved subtree, which may
+            # include other tracked branches (e.g. children of an
+            # aborted interior branch) — purge them too
+            for s in list(self._seq_owner):
+                if s not in self.engine.kv.tree:
+                    self._untrack(s)
 
     def runnable(self) -> List[int]:
         """Sequences that may decode this step.
 
         Asks the lifecycle kernel directly: ACTIVE sequences run, FROZEN
         origins wait for their children, and anything resolved by a
-        commit/abort/invalidation is dropped from tracking here.
+        commit/abort/invalidation is dropped from tracking (and its
+        resolved subtree reaped from the kernel).
         """
         out: List[int] = []
         for seq in list(self._seq_owner):
+            if seq not in self._seq_owner:
+                continue   # dropped with an earlier subtree this round
+            if seq not in self.engine.kv.tree:
+                self._untrack(seq)   # reaped externally (release/evict)
+                continue
             status = self.engine.kv.status(seq)
             if status is BranchStatus.ACTIVE:
                 out.append(seq)
             elif status is not BranchStatus.FROZEN:
                 # resolved (committed / aborted / stale): stop tracking
-                self._seq_owner.pop(seq, None)
+                self._drop(seq)
         return out
 
     def _retire(self, seq: int) -> None:
-        req = self._requests[self._seq_owner[seq]]
+        rid = self._seq_owner[seq]
         node = self.engine.kv.tree.node(seq)
         if node.parent is None:
-            # a finished root request leaves the engine entirely
-            req.finished = self.engine.tokens(seq)
+            # a finished root request leaves the engine entirely;
+            # release() invalidates and reaps every domain's entries,
+            # and the Request itself moves to the one-shot result slot
+            # so host state stays bounded in a long-running loop
+            self._results[rid] = self.engine.tokens(seq)
+            self._requests.pop(rid, None)
             self.engine.release(seq)
             self._seq_owner.pop(seq, None)
+            self._reserved.pop(seq, None)
         # a finished *branch* stays live: the agent decides commit/abort
 
     def step(self, *, greedy: bool = True, temperature: float = 1.0,
@@ -201,10 +264,9 @@ class Scheduler:
                                temperature=temperature, key=sub)
             decoded += len(group)
         retired = 0
-        for seq in list(self._seq_owner):
-            status = self.engine.kv.status(seq)
-            if status is BranchStatus.ACTIVE and self._request_done(
-                    self._requests[self._seq_owner[seq]], seq):
+        for seq in self.runnable():   # re-asks the kernel; purges resolved
+            req = self._requests.get(self._seq_owner[seq])
+            if req is not None and self._request_done(req, seq):
                 self._retire(seq)
                 retired += int(seq not in self._seq_owner)
         self.steps += 1
@@ -229,8 +291,18 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def result(self, req_id: int) -> List[int]:
-        """Final token list of a retired request."""
-        return list(self._requests[req_id].finished)
+        """Claim the final token list of a retired request.
+
+        One-shot: claiming drops the request's last host state, so a
+        long-running loop stays bounded.  Returns ``[]`` while the
+        request is still queued or decoding; raises ``BranchError`` for
+        an unknown (or already-claimed, or evicted-unfinished) request.
+        """
+        if req_id in self._results:
+            return self._results.pop(req_id)
+        if req_id in self._requests:
+            return []
+        raise BranchError(f"unknown or already-claimed request {req_id}")
 
     def seq_of(self, req_id: int) -> int:
         """The admitted root sequence of a request (its fork origin)."""
@@ -242,7 +314,8 @@ class Scheduler:
     def stats(self) -> Dict[str, Any]:
         st = self.engine.stats()
         st.update(steps=self.steps, tokens_generated=self.tokens_generated,
-                  waiting=len(self._waiting), running=len(self._seq_owner))
+                  waiting=len(self._waiting), running=len(self._seq_owner),
+                  pages_reserved=self._pages_reserved())
         return st
 
 

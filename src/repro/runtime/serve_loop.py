@@ -160,6 +160,9 @@ class TokenDomain:
     def on_invalidate(self, branch: int) -> None:
         self._tokens.pop(branch, None)
 
+    def on_reap(self, branch: int) -> None:
+        self._tokens.pop(branch, None)
+
     # -- accessors -------------------------------------------------------
     def seed(self, seq: int, tokens: Sequence[int]) -> None:
         self._tokens[seq] = list(tokens)
@@ -268,16 +271,27 @@ class ServeEngine:
         """One token for each sequence (they decode as one batch)."""
         lengths_before = np.array([self.kv.length(s) for s in seq_ids],
                                   np.int32)
-        # host: reserve slots; collect every CoW fault across the batch
-        slots = []
+        # refuse BEFORE mutating metadata if any sequence's table would
+        # outgrow the per-sequence limit (dense_block_tables would raise
+        # only after the batch's slots were already reserved)
+        for s, ln in zip(seq_ids, lengths_before):
+            if int(ln) // self.page_size + 1 > self.max_pages:
+                raise ValueError(
+                    f"sequence {s} would need "
+                    f"{int(ln) // self.page_size + 1} pages > "
+                    f"{self.max_pages} (max_pages_per_seq)")
+        # host: reserve slots transactionally — if the pool exhausts on a
+        # later batch member, earlier members' tables/lengths/CoW swaps
+        # are rolled back before the MemoryError propagates, so a decode
+        # step either runs for the whole batch or mutates nothing
+        slot_lists = self.kv.prepare_append_batch(seq_ids, 1)
+        slots = [sl[0] for sl in slot_lists]
         cow_src: List[int] = []
         cow_dst: List[int] = []
-        for s in seq_ids:
-            (slot,) = self.kv.prepare_append(s, 1)
+        for slot in slots:
             for cow in slot.cow:
                 cow_src.append(cow.src_page)
                 cow_dst.append(cow.dst_page)
-            slots.append(slot)
         if cow_src:
             self._service_cow(cow_src, cow_dst)
         bt, _ = self.kv.dense_block_tables(seq_ids, self.max_pages)

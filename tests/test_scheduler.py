@@ -99,25 +99,59 @@ def test_continuous_batching_matches_unscheduled_decode(engine_setup):
 
 def test_admission_waits_for_page_budget(engine_setup):
     eng = fresh_engine(engine_setup, num_pages=5)
-    sched = Scheduler(eng, SchedulerConfig(max_batch=4, decode_reserve=2))
-    r1 = sched.submit(list(range(1, 9)), max_new_tokens=2)   # 2 pages
+    sched = Scheduler(eng, SchedulerConfig(max_batch=4))
+    # each request reserves its worst case: ceil((8+2)/4) = 3 of 5 pages
+    r1 = sched.submit(list(range(1, 9)), max_new_tokens=2)
     r2 = sched.submit(list(range(11, 19)), max_new_tokens=2)
     st = sched.step()
-    assert st["admitted"] == 1                # r2 must wait: 3 < 2+2 free
+    assert st["admitted"] == 1                # r2 must wait: 3 + 3 > 5
     assert st["waiting"] == 1
     sched.run(max_steps=20)
     assert len(sched.result(r1)) == 10
     assert len(sched.result(r2)) == 10        # admitted after r1 retired
 
 
-def test_fork_admission_page_budget(engine_setup):
+def test_admission_accounts_for_decode_budget(engine_setup):
+    # a generation longer than the pool can ever hold must be -EAGAIN'd
+    # at submit, not -ENOSPC'd (and state-corrupted) mid-decode
     eng = fresh_engine(engine_setup, num_pages=8)
-    sched = Scheduler(eng, SchedulerConfig(decode_reserve=1))
-    rid = sched.submit(list(range(1, 9)), max_new_tokens=64)
+    sched = Scheduler(eng)
+    with pytest.raises(AdmissionDenied):
+        sched.submit(list(range(1, 9)), max_new_tokens=40)  # 12 > 8 pages
+
+
+def test_oversize_decode_budget_rejected_at_submit(engine_setup):
+    # worst case exceeding the per-sequence block table can never decode
+    # to completion (dense_block_tables would blow up) -> reject up front
+    eng = fresh_engine(engine_setup, num_pages=128, max_pages_per_seq=4)
+    sched = Scheduler(eng)
+    with pytest.raises(AdmissionDenied):
+        sched.submit([1, 2, 3, 4], max_new_tokens=16)       # 5 > 4 pages
+
+
+def test_admitted_requests_always_complete(engine_setup):
+    # the pool only fits one worst-case request at a time; the ledger
+    # serializes them and every one decodes to its full budget
+    eng = fresh_engine(engine_setup, num_pages=4)
+    sched = Scheduler(eng)
+    rids = [sched.submit([r + 1, r + 2], max_new_tokens=10)
+            for r in range(3)]                # worst: 3 of 4 pages each
+    sched.run(max_steps=60)
+    for rid in rids:
+        assert len(sched.result(rid)) == 12
+    st = sched.stats()
+    assert st["pages_free"] == st["pages_total"]
+    assert st["pages_reserved"] == 0
+
+
+def test_fork_admission_page_budget(engine_setup):
+    eng = fresh_engine(engine_setup, num_pages=32)
+    sched = Scheduler(eng)
+    rid = sched.submit(list(range(1, 9)), max_new_tokens=8)  # worst 4
     sched.admit()
     seq = sched.seq_of(rid)
     with pytest.raises(AdmissionDenied):
-        sched.fork(seq, 20)                   # would overrun the pool
+        sched.fork(seq, 20)                   # 20*(4-2+1) > 32-4 budget
     children = sched.fork(seq, 2)
     # frozen origin waits; children join the running batch
     assert set(sched.runnable()) == set(children)
@@ -126,7 +160,7 @@ def test_fork_admission_page_budget(engine_setup):
 def test_scheduler_observes_kernel_commit(engine_setup):
     eng = fresh_engine(engine_setup)
     sched = Scheduler(eng, SchedulerConfig(max_batch=8))
-    rid = sched.submit([2, 4, 6, 8], max_new_tokens=64)
+    rid = sched.submit([2, 4, 6, 8], max_new_tokens=32)
     sched.admit()
     seq = sched.seq_of(rid)
     b1, b2 = sched.fork(seq, 2)
@@ -175,7 +209,7 @@ def test_raced_runtime_commit_kv_loser_strands_nothing(engine_setup):
 
 def test_impossible_request_rejected_at_submit(engine_setup):
     eng = fresh_engine(engine_setup, num_pages=4)
-    sched = Scheduler(eng, SchedulerConfig(decode_reserve=2))
+    sched = Scheduler(eng)
     with pytest.raises(AdmissionDenied):
         sched.submit(list(range(100)))   # can never fit the pool
     # the FIFO head is not blocked: a feasible request still flows
@@ -254,3 +288,150 @@ def test_raced_runtime_commits_store_decides_once(engine_setup):
     assert st["sequences_live"] == 1
     used = st["pages_total"] - st["pages_free"]
     assert used == pages_for(eng, eng.kv.length(seq))
+
+
+# ---------------------------------------------------------------------------
+# transactional decode: -ENOSPC mutates nothing
+# ---------------------------------------------------------------------------
+
+def test_decode_enospc_mutates_nothing(engine_setup):
+    """A pool exhausted on a *later* batch member must roll back the
+    earlier members' slot reservations: lengths, tables, free list and
+    token tails all stay exactly as before the failed step."""
+    eng = fresh_engine(engine_setup, num_pages=3)
+    a = eng.add_request([1, 2, 3, 4, 5])      # 1 full page, length 4
+    b = eng.add_request([6, 7, 8, 9, 10])
+    toks_a, toks_b = eng.tokens(a), eng.tokens(b)
+    with pytest.raises(MemoryError):
+        eng.decode([a, b])                    # both need a fresh page, 1 free
+    assert eng.kv.length(a) == 4 and eng.kv.length(b) == 4
+    assert len(eng.kv.block_table(a)) == 1
+    assert eng.kv.free_pages == 1
+    assert eng.tokens(a) == toks_a and eng.tokens(b) == toks_b
+    # the length == tokens - 1 invariant survived: a alone still decodes
+    eng.decode([a])
+    assert eng.kv.length(a) == 5
+
+
+def test_decode_cow_rollback_on_enospc(engine_setup):
+    """A speculative CoW tail swap whose device copy never ran must be
+    undone when a later batch member exhausts the pool."""
+    eng = fresh_engine(engine_setup, num_pages=2)
+    root = eng.add_request([1, 2, 3])         # mid-page shared tail
+    b1, b2 = eng.fork(root, 2)
+    tail = eng.kv.block_table(root)[-1]
+    d0 = eng.cow_dispatches
+    with pytest.raises(MemoryError):
+        eng.decode([b1, b2])                  # two CoW faults, one free page
+    # b1's CoW was rolled back: tail shared 3 ways again, page refunded
+    assert eng.kv.refcount(tail) == 3
+    assert eng.kv.block_table(b1) == eng.kv.block_table(root)
+    assert eng.kv.free_pages == 1
+    assert eng.kv.length(b1) == eng.kv.length(b2) == 2
+    assert eng.cow_dispatches == d0           # no device copy was issued
+
+
+def test_decode_refuses_table_overflow_without_mutation(engine_setup):
+    """Outgrowing the per-sequence block table is refused before any
+    metadata mutates — not discovered by dense_block_tables after the
+    batch's slots were already reserved."""
+    eng = fresh_engine(engine_setup, max_pages_per_seq=1)
+    seq = eng.add_request([1, 2, 3, 4])
+    eng.decode([seq])                         # fills the single page
+    toks = eng.tokens(seq)
+    with pytest.raises(ValueError):
+        eng.decode([seq])                     # would need a second page
+    assert eng.kv.length(seq) == 4
+    assert len(eng.kv.block_table(seq)) == 1
+    assert eng.tokens(seq) == toks
+
+
+# ---------------------------------------------------------------------------
+# kernel GC: resolved subtrees are reaped, host memory stays bounded
+# ---------------------------------------------------------------------------
+
+def test_resolved_branches_reaped_from_kernel(engine_setup):
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng)
+    rid = sched.submit([2, 4, 6, 8], max_new_tokens=4)
+    sched.admit()
+    seq = sched.seq_of(rid)
+    b1, b2 = sched.fork(seq, 2)
+    sched.step()
+    eng.commit(b1)
+    sched.run(max_steps=10)
+    assert sched.result(rid)                  # captured before release
+    # retired + resolved work leaves no lifecycle nodes, payload entries
+    # or request records — a long-running loop cannot grow without bound
+    assert len(eng.kv.tree) == 0
+    assert eng.kv._tables == {} and eng.kv._lengths == {}
+    assert len(eng.token_domain) == 0
+    assert sched._requests == {} and sched._results == {}
+    with pytest.raises(Exception):
+        sched.result(rid)                     # results are claimed once
+
+
+def test_abort_of_tracked_subtree_observed_not_crashed(engine_setup):
+    """An agent aborting an interior branch whose children the scheduler
+    also tracks must be *observed*: the whole reaped subtree leaves
+    tracking and the origin resumes decoding — no BranchStateError."""
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng)
+    rid = sched.submit([1, 2, 3, 4], max_new_tokens=8)
+    sched.admit()
+    root = sched.seq_of(rid)
+    (b,) = sched.fork(root, 1)
+    sched.fork(b, 2)                          # nested exploration
+    sched.step()
+    eng.abort(b)                              # kills b and its children
+    sched.step()                              # observes, must not crash
+    assert sched.runnable() == [root]
+    sched.run(max_steps=20)
+    assert len(sched.result(rid)) == 12
+
+
+def test_external_release_of_scheduled_request(engine_setup):
+    """Evicting a scheduled request's root out from under the scheduler
+    (serving-slot eviction) drops its tracking and request record."""
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng)
+    rid = sched.submit([1, 2, 3, 4], max_new_tokens=8)
+    r2 = sched.submit([5, 6, 7], max_new_tokens=2)
+    sched.admit()
+    eng.release(sched.seq_of(rid))            # evicted before finishing
+    sched.run(max_steps=10)
+    assert len(sched.result(r2)) == 5         # the other request finishes
+    assert sched._requests == {} and sched._seq_owner == {}
+    with pytest.raises(Exception):
+        sched.result(rid)                     # evicted: no result to claim
+
+
+def test_release_reaps_whole_subtree(engine_setup):
+    eng = fresh_engine(engine_setup)
+    root = eng.add_request([1, 2, 3, 4, 5])
+    b1, b2 = eng.fork(root, 2)
+    eng.decode([b1, b2])
+    eng.release(root)                         # evict root + live children
+    assert eng.stats()["pages_free"] == eng.stats()["pages_total"]
+    assert len(eng.kv.tree) == 0
+    assert eng.kv._tables == {} and eng.kv._lengths == {}
+
+
+# ---------------------------------------------------------------------------
+# BR_ISOLATE: sibling handles are not addressable
+# ---------------------------------------------------------------------------
+
+def test_br_isolate_blocks_sibling_handles():
+    from repro.core.errors import BranchError
+    from repro.core.runtime_api import BR_ISOLATE
+
+    store = BranchStore({"plan": b"root"})
+    runtime = BranchRuntime(store)
+    root_ctx = root_context(store)
+    h1, h2 = runtime.create(root_ctx, 2)
+    assert len(h1.group) == 2                 # default: siblings visible
+    i1, i2 = runtime.create(root_ctx, 2, flags=BR_STATE | BR_ISOLATE)
+    with pytest.raises(BranchError):
+        _ = i1.group                          # isolation enforced here
+    (solo,) = runtime.create(root_ctx, 1, flags=BR_STATE | BR_ISOLATE)
+    assert solo.group == (solo,)              # self is always addressable
