@@ -1,0 +1,134 @@
+"""Exploration-policy throughput: the BranchContext subsystem under load.
+
+Per policy × fan-out: wall-clock branches/s (forks actually created and
+resolved through scheduler admission), end-to-end exploration latency,
+and peak pool utilization — plus kernel-level commit latency and the
+aggregate throughput of 8 explorations multiplexed on one engine.
+BranchBench's point (PAPERS.md) is that agentic workloads are defined by
+their branching patterns; these rows are the repo's trajectory for them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import jax
+
+from repro.configs import get_config
+from repro.explore_ctx import (
+    ExplorationDriver,
+    beam_search,
+    best_of_n,
+    tree_search,
+)
+from repro.models.model import Model
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
+from repro.runtime.serve_loop import ServeEngine
+
+
+def _build_engine():
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServeEngine(model, params, num_pages=512, page_size=8,
+                       max_pages_per_seq=32)
+
+
+def _branches_of(res) -> int:
+    st = res.stats
+    if "branches" in st:
+        return st["branches"]
+    if "branches_created" in st:
+        return st["branches_created"]
+    return sum(len(lv.get("scores", [])) for lv in st.get("levels", []))
+
+
+def _drive(engine, launches) -> Tuple[float, int, int, int]:
+    """Run explorations to completion.
+
+    Returns (seconds, branches_created, tokens, peak_pages_used).
+    """
+    sched = Scheduler(engine, SchedulerConfig(max_batch=16, seed=7))
+    driver = ExplorationDriver(sched)
+    exps = [launch(driver) for launch in launches]
+    peak = 0
+    t0 = time.perf_counter()
+    for _ in range(2000):
+        if all(e.done for e in exps):
+            break
+        driver.step()
+        st = engine.stats()
+        peak = max(peak, st["pages_total"] - st["pages_free"])
+    else:
+        raise RuntimeError("benchmark explorations exceeded the step "
+                           "bound (fork-blocked with no stall kick?)")
+    dt = time.perf_counter() - t0
+    for e in exps:
+        if e.error is not None:
+            raise e.error
+    branches = sum(_branches_of(e.result) for e in exps)
+    tokens = sum(len(e.result.generated) for e in exps)
+    return dt, branches, tokens, peak
+
+
+def _launch(policy, prompt, budget, **kw):
+    return lambda drv: drv.explore(prompt, budget, policy, **kw)
+
+
+def _timed(eng, launches) -> Tuple[float, int, int, int]:
+    """Warm, then time: decode batch widths are unpadded, so each
+    configuration's first run pays its jit compiles — running the same
+    shape twice keeps branches/s comparable across fan-outs."""
+    _drive(eng, launches)
+    return _drive(eng, launches)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    eng = _build_engine()
+
+    for fan in (2, 4, 8):
+        dt, br, toks, peak = _timed(eng, [_launch(
+            best_of_n, [3, 1, 4, 1], 10, n=fan, tokens=4)])
+        rows.append((f"best_of_{fan}_branches_per_s", br / dt,
+                     f"peak_pages={peak}"))
+
+        dt, br, toks, peak = _timed(eng, [_launch(
+            beam_search, [3, 1, 4, 1], 2 * 4 + 1, width=fan, depth=2,
+            tokens_per_level=4)])
+        rows.append((f"beam_w{fan}_d2_branches_per_s", br / dt,
+                     f"peak_pages={peak}"))
+
+        dt, br, toks, peak = _timed(eng, [_launch(
+            tree_search, [3, 1, 4, 1], 3 * 3 + 1, fan_out=fan,
+            max_nodes=3 * fan, tokens_per_node=3, max_depth=3)])
+        rows.append((f"tree_f{fan}_n{3 * fan}_branches_per_s", br / dt,
+                     f"peak_pages={peak}"))
+
+    # 8 interleaved explorations multiplexed into one continuous batch
+    launches = [_launch(best_of_n, [i + 1, i + 2, i + 3], 10, n=4,
+                        tokens=4) for i in range(8)]
+    dt, br, toks, peak = _timed(eng, launches)
+    rows.append(("concurrent8_branches_per_s", br / dt,
+                 f"tokens={toks},peak_pages={peak}"))
+    rows.append(("concurrent8_latency_us", dt * 1e6, "8x_best_of_4"))
+
+    # kernel-level commit latency (host work: table promote + sibling
+    # invalidation + scheduler reap), isolated from decode time
+    sched = Scheduler(eng, SchedulerConfig(max_batch=16))
+    reps, total = 10, 0.0
+    for r in range(reps):
+        rid = sched.submit([5, 6, 7, 8], max_new_tokens=6)
+        sched.admit()
+        seq = sched.seq_of(rid)
+        kids = sched.fork(seq, 4)
+        eng.decode(kids)
+        t0 = time.perf_counter()
+        eng.commit(kids[0])
+        total += time.perf_counter() - t0
+        sched.finish(rid)
+    rows.append(("commit_latency_us", total / reps * 1e6,
+                 "4way_group_first_commit_wins"))
+    return rows

@@ -1,25 +1,52 @@
 """Benchmark harness — one module per paper table.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Tables:
+Prints ``name,us_per_call,derived`` CSV rows and writes a
+machine-readable ``BENCH_<timestamp>.json`` (override with ``--out``)
+so the perf trajectory is tracked across PRs.  Tables:
   T4 (creation O(1))      -> branch_create
   T5 (commit ∝ Δ)        -> commit_abort
   T6 (throughput)         -> throughput
   serving-scale branching -> kvbranch_bench
   serve throughput        -> serve_throughput
   in-program exploration  -> explore_bench
+  exploration policies    -> explore_policies
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import platform
+import subprocess
 import sys
+import time
 import traceback
+from pathlib import Path
 
 
-def main() -> None:
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="path for the JSON record (default: "
+                         "BENCH_<timestamp>.json in the cwd)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names to run")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         branch_create,
         commit_abort,
         explore_bench,
+        explore_policies,
         kvbranch_bench,
         serve_throughput,
         throughput,
@@ -32,16 +59,44 @@ def main() -> None:
         ("kvbranch_bench", kvbranch_bench),
         ("serve_throughput", serve_throughput),
         ("explore_bench", explore_bench),
+        ("explore_policies", explore_policies),
     ]
+    if args.only:
+        keep = set(args.only.split(","))
+        unknown = keep - {n for n, _ in modules}
+        if unknown:
+            ap.error(f"unknown benchmark module(s): {sorted(unknown)}")
+        modules = [(n, m) for n, m in modules if n in keep]
+
     print("name,us_per_call,derived")
+    records = []
     failed = []
     for name, mod in modules:
+        t0 = time.time()
         try:
             for row, value, derived in mod.run():
                 print(f"{name}.{row},{value:.3f},{derived}")
+                records.append({"module": name, "name": row,
+                                "value": value, "derived": derived})
         except Exception:
             traceback.print_exc()
             failed.append(name)
+        records.append({"module": name, "name": "_wall_s",
+                        "value": round(time.time() - t0, 3),
+                        "derived": "harness"})
+
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    out = Path(args.out) if args.out else Path(f"BENCH_{stamp}.json")
+    out.write_text(json.dumps({
+        "schema": 1,
+        "created": stamp,
+        "git_rev": _git_rev(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "failed": failed,
+        "rows": records,
+    }, indent=2))
+    print(f"wrote {out}")
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

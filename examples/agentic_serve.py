@@ -1,9 +1,12 @@
-"""Agentic exploration over generations — the paper's serving workload.
+"""Agentic exploration over generations — the paper's serving workload,
+now through the BranchContext subsystem.
 
-A Tree-of-Thoughts style search: fork N continuation branches from a
-shared prompt (CoW KV pages), decode each, score them, commit the best
-(first-commit-wins invalidates + recycles the siblings), then explore
-nested sub-branches from the winner.
+Two Tree-of-Thoughts searches (``beam_search``: fork N continuation
+branches per level, decode, score, commit the best) plus a nested
+``tree_search`` run *concurrently* on one engine: every request enters
+through ``Scheduler.submit`` admission (worst-case page reservations, so
+no mid-decode -ENOSPC), and the exploration driver multiplexes all
+policies' decode work into the same continuous batch.
 
 Run:  PYTHONPATH=src python examples/agentic_serve.py
 """
@@ -11,36 +14,12 @@ Run:  PYTHONPATH=src python examples/agentic_serve.py
 import dataclasses
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
+from repro.explore_ctx import ExplorationDriver, beam_search, tree_search
 from repro.models.model import Model
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
 from repro.runtime.serve_loop import ServeEngine
-
-
-def branch_score(engine: ServeEngine, seq: int, prompt_len: int) -> float:
-    """Score a branch: mean of its generated token ids as a stand-in for
-    a task reward (in production: a verifier / unit tests / reward
-    model)."""
-    gen = engine.tokens(seq)[prompt_len:]
-    return float(np.mean(gen)) if gen else 0.0
-
-
-def explore_level(engine, parent, n_branches, n_tokens, key, prompt_len):
-    branches = engine.fork(parent, n_branches)
-    for i in range(n_tokens):
-        key, k = jax.random.split(key)
-        engine.decode(branches, greedy=False, temperature=2.0, key=k)
-    scores = [branch_score(engine, b, prompt_len) for b in branches]
-    ranked = sorted(zip(scores, branches), reverse=True)
-    best = ranked[0][1]
-    print(f"  scores: {[f'{s:.1f}' for s, _ in ranked]} -> "
-          f"committing branch {best}")
-    for _, b in ranked[1:]:
-        pass  # losers are invalidated by the winner's commit
-    engine.commit(best)
-    return key
 
 
 def main():
@@ -49,20 +28,44 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=512, page_size=8,
                          max_pages_per_seq=32)
+    sched = Scheduler(engine, SchedulerConfig(max_batch=8, seed=42))
+    driver = ExplorationDriver(sched)
 
     prompt = [7, 3, 9, 21, 14, 2]
-    root = engine.add_request(prompt)
-    key = jax.random.PRNGKey(42)
-
     print(f"prompt: {prompt}")
     print(f"pool before: {engine.stats()}")
-    for level in range(3):
-        print(f"level {level}: fork 3 branches, decode 4 tokens each")
-        key = explore_level(engine, root, n_branches=3, n_tokens=4,
-                            key=key, prompt_len=len(prompt))
-        print(f"  committed length: {len(engine.tokens(root))}, "
-              f"pool: {engine.stats()}")
-    print(f"final sequence: {engine.tokens(root)}")
+
+    # three concurrent explorations, one page pool, one batching loop
+    beam = driver.explore(prompt, max_new_tokens=13, policy=beam_search,
+                          width=3, depth=3, tokens_per_level=4,
+                          temperature=2.0, name="beam")
+    beam2 = driver.explore([4, 8, 15, 16, 23, 42], max_new_tokens=13,
+                           policy=beam_search, width=3, depth=3,
+                           tokens_per_level=4, temperature=2.0,
+                           name="beam2")
+    tree = driver.explore([5, 10, 20], max_new_tokens=17,
+                          policy=tree_search, fan_out=3, max_nodes=9,
+                          tokens_per_node=4, max_depth=3,
+                          temperature=2.0, name="tree")
+    driver.run()
+
+    for level in beam.result.stats["levels"]:
+        if level.get("degraded"):
+            print(f"  level {level['level']}: page pressure — "
+                  "decoded unforked")
+            continue
+        scores = sorted(level["scores"], reverse=True)
+        print(f"  level {level['level']}: scores "
+              f"{[f'{s:.1f}' for s in scores]} -> "
+              f"committing branch {level['winner_seq']}")
+    tree_score = ("degraded" if tree.result.score is None
+                  else f"{tree.result.score:.1f}")
+    print(f"nested tree: created {tree.result.stats['branches_created']} "
+          f"branches, winner depth {tree.result.stats.get('winner_depth')}"
+          f", score {tree_score}")
+    print(f"final sequence: {beam.result.tokens}")
+    print(f"concurrent sequence: {beam2.result.tokens}")
+    print(f"pool after (drained): {engine.stats()}")
 
 
 if __name__ == "__main__":

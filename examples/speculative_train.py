@@ -1,7 +1,10 @@
-"""Speculative training: every step forks K candidate update branches
-(different LR multipliers), runs them in parallel inside one jit, and
-commits the one with the best validation loss — first-commit-wins as a
-training-time primitive (paper §8: "system configuration tuning").
+"""Speculative training through the BranchContext subsystem: every step
+forks K candidate update branches (different LR multipliers), runs them
+in parallel inside one jit, and commits the one with the best validation
+loss — first-commit-wins as a training-time primitive (paper §8:
+"system configuration tuning").  The fork/explore/commit mechanics live
+in ``repro.explore_ctx.SpeculativeTrainer``; this example is the
+three-line usage.
 
 Run:  PYTHONPATH=src python examples/speculative_train.py
 """
@@ -9,55 +12,30 @@ Run:  PYTHONPATH=src python examples/speculative_train.py
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
-from repro.core import explore
 from repro.data import SyntheticLMPipeline
+from repro.explore_ctx import SpeculativeTrainer
 from repro.models.model import Model
-from repro.optim import adamw, apply_updates
+from repro.optim import adamw
 
 
 def main():
     cfg = dataclasses.replace(reduced(get_config("qwen2-1.5b")),
                               dtype="float32")
     model = Model(cfg, attn_chunk=8, loss_chunk=8, remat=False)
-    opt = adamw(1e-3)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    state = {"params": params, "opt": opt.init(params)}
     data = SyntheticLMPipeline(cfg, batch=4, seq=32, seed=1)
     val_batch = data.peek(10_000)  # held-out
 
-    def one_branch(state, key, batch):
-        """Try this branch's LR scale; success = val loss improves."""
-        lr_scale = 0.25 * (2.0 ** jax.random.randint(key, (), 0, 4)
-                           .astype(jnp.float32))
-
-        def loss_fn(p):
-            return model.loss(p, batch)[0]
-
-        grads = jax.grad(loss_fn)(state["params"])
-        grads = jax.tree_util.tree_map(lambda g: g * lr_scale, grads)
-        updates, new_opt = opt.update(grads, state["opt"],
-                                      state["params"])
-        new_params = apply_updates(state["params"], updates)
-        val = model.loss(new_params, val_batch)[0]
-        new_state = {"params": new_params, "opt": new_opt}
-        return new_state, jnp.isfinite(val), val
-
-    @jax.jit
-    def spec_step(state, key, batch):
-        return explore(lambda s, k: one_branch(s, k, batch),
-                       state, 4, key, commit_time_fn=lambda a: a)
+    trainer = SpeculativeTrainer(model, adamw(1e-3), n_branches=4)
+    key = jax.random.PRNGKey(0)
+    state = trainer.init(key)
 
     for step in range(15):
         key, k = jax.random.split(key)
-        batch = data.next()
-        res = spec_step(state, k, batch)
-        state = res.state
-        vals = [f"{float(v):.3f}" for v in res.aux]
-        print(f"step {step:02d} committed branch {int(res.winner)} "
+        state, info = trainer.step(state, k, data.next(), val_batch)
+        vals = [f"{v:.3f}" for v in info["val_losses"]]
+        print(f"step {step:02d} committed branch {info['winner']} "
               f"val-losses {vals}")
     print("speculative training complete")
 

@@ -278,6 +278,33 @@ class KVBranchManager:
                 raise
             return [slots for _, slots in done]
 
+    def truncate(self, seq_id: int, new_length: int) -> None:
+        """Shrink a sequence to ``new_length`` cached tokens.
+
+        The speculative-decoding primitive: a draft branch whose suffix
+        failed verification keeps only its verified prefix.  Surplus
+        tail pages are decref'd (a page still shared with the fork
+        origin simply drops this branch's reference); retained pages are
+        untouched, and any stale KV beyond ``new_length`` in a partially
+        filled tail page is never read (attention is bounded by the
+        length) and is overwritten by later appends.
+        """
+        with self._tree.lock:
+            node = self._tree.check_live(seq_id)
+            if node.status is BranchStatus.FROZEN:
+                raise FrozenOriginError(
+                    f"sequence {seq_id} has live children and is frozen")
+            if new_length < 0 or new_length > self._lengths[seq_id]:
+                raise ValueError(
+                    f"cannot truncate sequence {seq_id} from "
+                    f"{self._lengths[seq_id]} to {new_length} tokens")
+            table = self._tables[seq_id]
+            keep = -(-new_length // self.page_size)
+            if keep < len(table):
+                self._decref(table[keep:])
+                del table[keep:]
+            self._lengths[seq_id] = new_length
+
     def commit(self, seq_id: int) -> int:
         """First-commit-wins: promote this child's table into the parent.
 

@@ -89,9 +89,20 @@ class BranchRuntime:
     """Composes branch forks across state domains atomically."""
 
     def __init__(self, store: BranchStore,
-                 kv_manager: Optional[Any] = None):
+                 kv_manager: Optional[Any] = None,
+                 kv_fork: Optional[Callable[[int, int], List[int]]] = None):
         self.store = store
         self.kv = kv_manager  # duck-typed: fork(seq, n), commit(seq), abort(seq)
+        # Injectable fork path for the KV domain: a serving stack passes
+        # ``Scheduler.fork`` here so composite creates go through page-
+        # budget admission (AdmissionDenied unwinds the store forks too)
+        # instead of bypassing the reservation ledger.
+        self.kv_fork = kv_fork or (kv_manager.fork if kv_manager else None)
+
+    @classmethod
+    def scheduled(cls, store: BranchStore, scheduler: Any) -> "BranchRuntime":
+        """A runtime whose KV domain forks through scheduler admission."""
+        return cls(store, scheduler.engine.kv, kv_fork=scheduler.fork)
 
     # ------------------------------------------------------------------
     def _kv_lock(self) -> contextlib.AbstractContextManager:
@@ -133,7 +144,7 @@ class BranchRuntime:
                 if self.kv is None:
                     raise BranchStateError("BR_KV requested but no kv manager")
                 for seq in kv_seqs:
-                    children = self.kv.fork(seq, n_branches)
+                    children = self.kv_fork(seq, n_branches)
                     for i, child_seq in enumerate(children):
                         kv_maps[i][seq] = child_seq
                     done.append(

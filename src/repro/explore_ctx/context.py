@@ -1,0 +1,232 @@
+"""BranchContext — one node of a scheduled exploration tree.
+
+The paper ships two artifacts: the branch *primitive* (kernel, domains,
+scheduler — PR 1) and **BranchContext**, the integration library that
+turns the primitive into ready-to-use exploration patterns.  This module
+is the library's spine: a context-manager handle over one scheduler-
+tracked sequence that exposes the structured fork/explore/commit-or-
+abort lifecycle to policies.
+
+A context differs from raw engine/scheduler calls in three ways:
+
+* **Admission-checked by construction** — ``fork`` goes through
+  ``Scheduler.fork`` (or, for composite contexts, a
+  ``BranchRuntime`` whose KV fork is the scheduler's), so every branch
+  a policy creates is backed by a worst-case page reservation and
+  ``AdmissionDenied`` is backpressure, never mid-decode ``-ENOSPC``.
+* **Nestable** — a child context forks grandchildren; aborting an
+  ancestor invalidates the whole subtree across every domain
+  (the kernel's recursive sibling invalidation, reached through one
+  object).  ``commit_chain`` promotes a deep winner level by level to
+  the exploration root.
+* **Composite** — a context may carry a :class:`~repro.core.branch.
+  BranchContext` (store) view alongside its KV sequence; forks and
+  commits then resolve both domains atomically through
+  :class:`~repro.core.runtime_api.BranchRuntime`, so a policy can
+  branch filesystem-like agent state together with generation state.
+
+Contexts do not pace their own decoding: the
+:class:`~repro.explore_ctx.driver.ExplorationDriver` multiplexes decode
+work from many live contexts into the scheduler's continuous-batching
+loop.  Within a ``with`` block, leaving without commit aborts (no side
+effects escape an unresolved branch).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.branch import BranchContext as StateContext
+from repro.core.errors import BranchStateError
+from repro.core.lifecycle import BranchStatus
+from repro.core.runtime_api import BR_KV, BR_STATE, BranchHandle, BranchRuntime
+from repro.runtime.scheduler import AdmissionDenied
+
+
+@dataclass
+class PolicyResult:
+    """What an exploration policy returns through its driver."""
+
+    req_id: Optional[int]
+    tokens: List[int]            # the exploration root's full token list
+    generated: List[int]         # tokens beyond the root's starting point
+    score: Optional[float] = None
+    committed: bool = True       # False if the policy kept the origin
+    stats: Dict[str, Any] = field(default_factory=dict)
+
+
+def policy_result(root: "BranchContext", *, score: Optional[float] = None,
+                  committed: bool = True, **stats: Any) -> PolicyResult:
+    """Assemble a :class:`PolicyResult` from the exploration root."""
+    toks = root.tokens()
+    return PolicyResult(req_id=root.req_id, tokens=toks,
+                        generated=toks[root.fork_len:], score=score,
+                        committed=committed, stats=stats)
+
+
+class BranchContext:
+    """A scheduled branch following fork/explore/commit-or-abort."""
+
+    def __init__(self, sched: Any, seq: int, *,
+                 parent: Optional["BranchContext"] = None,
+                 req_id: Optional[int] = None,
+                 runtime: Optional[BranchRuntime] = None,
+                 state: Optional[StateContext] = None,
+                 handle: Optional[BranchHandle] = None):
+        self.sched = sched
+        self.engine = sched.engine
+        self.seq = seq
+        self.parent = parent
+        self.req_id = req_id if req_id is not None else (
+            parent.req_id if parent is not None else None)
+        self.runtime = runtime if runtime is not None else (
+            parent.runtime if parent is not None else None)
+        self.state = state
+        self.handle = handle
+        self.children: List["BranchContext"] = []
+        self.depth = 0 if parent is None else parent.depth + 1
+        self.score: Optional[float] = None
+        self._resolved = False
+        # token count at creation: generated() is everything after this
+        self.fork_len = len(self.engine.tokens(seq))
+
+    # -- liveness -------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        return self.seq in self.engine.kv.tree and \
+            self.engine.kv.is_live(self.seq)
+
+    @property
+    def status(self) -> Optional[BranchStatus]:
+        if self.seq not in self.engine.kv.tree:
+            return None          # reaped
+        return self.engine.kv.status(self.seq)
+
+    @property
+    def resolved(self) -> bool:
+        return self._resolved
+
+    # -- content --------------------------------------------------------
+    def tokens(self) -> List[int]:
+        """This branch's full token list (prompt + committed + own)."""
+        if self.seq in self.engine.token_domain:
+            return self.engine.tokens(self.seq)
+        if self._resolved and self.parent is not None:
+            return self.parent.tokens()   # committed: content lives there
+        if self.parent is None and self.req_id is not None:
+            # the root hit its decode budget and retired naturally: the
+            # scheduler captured the result before releasing the seq
+            res = self.sched.peek_result(self.req_id)
+            if res is not None:
+                return res
+        raise BranchStateError(
+            f"branch context seq={self.seq} has no token tail "
+            "(invalidated and reaped)")
+
+    def generated(self) -> List[int]:
+        """Tokens this context added since it was forked."""
+        return self.tokens()[self.fork_len:]
+
+    # -- lifecycle ------------------------------------------------------
+    def fork(self, n: int = 1) -> List["BranchContext"]:
+        """Fork ``n`` admission-checked children (one exclusive group).
+
+        Composite contexts fork the store domain in the same atomic
+        create: an ``AdmissionDenied`` from the KV side unwinds the
+        store forks, so no domain is half-created.  Children are parked
+        (held) — the driver decides when they decode.
+        """
+        if self.runtime is not None and self.state is not None:
+            # check the cheap reservation ledger BEFORE forking the store
+            # domain: a backpressure retry must not churn store nodes
+            if not self.sched.can_fork(self.seq, n):
+                raise AdmissionDenied(
+                    f"fork({self.seq}, n={n}) exceeds the page budget "
+                    "(-EAGAIN)")
+            handles = self.runtime.create(
+                self.state, n, flags=BR_STATE | BR_KV, kv_seqs=[self.seq])
+            kids = [
+                BranchContext(self.sched, h.kv_seqs[self.seq], parent=self,
+                              state=h.state, handle=h)
+                for h in handles
+            ]
+        else:
+            kids = [BranchContext(self.sched, s, parent=self)
+                    for s in self.sched.fork(self.seq, n)]
+        for k in kids:
+            self.sched.hold(k.seq)
+        self.children.extend(kids)
+        return kids
+
+    def commit(self) -> Optional["BranchContext"]:
+        """First-commit-wins into the parent; siblings invalidated."""
+        if self._resolved:
+            raise BranchStateError("branch context already resolved")
+        if self.handle is not None:
+            self.runtime.commit(self.handle)
+        else:
+            self.engine.commit(self.seq)
+        self._resolved = True
+        return self.parent
+
+    def commit_chain(self, until: Optional["BranchContext"] = None
+                     ) -> "BranchContext":
+        """Commit this branch level by level up to ``until`` (default:
+        the exploration root).
+
+        Each step's winner invalidates its siblings' whole subtrees —
+        the nested-search ending where one leaf's lineage becomes the
+        request's committed content.  Returns the context committed into.
+        """
+        cur = self
+        while cur is not until and cur.parent is not None:
+            cur.commit()
+            cur = cur.parent
+        return cur
+
+    def abort(self) -> None:
+        """Discard this branch (and, recursively, its live subtree)."""
+        if self._resolved:
+            return
+        if self.handle is not None:
+            self.runtime.abort(self.handle)
+        elif self.seq in self.engine.kv.tree and \
+                self.engine.kv.is_live(self.seq):
+            self.engine.abort(self.seq)
+        self._resolved = True
+
+    def prune_children(self) -> int:
+        """Abort every live child subtree (pre-commit cleanup)."""
+        n = 0
+        for k in self.children:
+            if not k._resolved and k.alive:
+                k.abort()
+                n += 1
+        return n
+
+    def truncate(self, n_generated: int) -> None:
+        """Keep only the first ``n_generated`` tokens generated here.
+
+        The speculative-decode primitive: a draft keeps its verified
+        prefix and commits that.
+        """
+        self.engine.truncate(self.seq, self.fork_len + n_generated)
+
+    # -- context manager ------------------------------------------------
+    def __enter__(self) -> "BranchContext":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if not self._resolved and self.alive and self.parent is not None:
+            self.abort()
+        return False
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        st = self.status
+        return (f"BranchContext(seq={self.seq}, depth={self.depth}, "
+                f"status={st.value if st else 'reaped'})")
+
+
+__all__ = ["BranchContext", "PolicyResult", "StateContext",
+           "policy_result"]

@@ -1,0 +1,452 @@
+"""Event-driven exploration driver — many searches, one engine.
+
+The paper's BranchContext library is only useful at serving scale if
+hundreds of independent explorations can share one engine without
+hand-rolled coordination.  This driver is that multiplexer:
+
+* **Policies are generators.**  A policy yields *work items* —
+  :class:`Submit`, :class:`Fork`, :class:`Decode`, :class:`Tick` — and
+  performs commits/aborts synchronously on its contexts.  ``yield
+  from`` composes policies into nested searches.
+* **One continuous batch.**  Each driver step resumes every policy
+  whose wait is satisfied, then runs exactly one ``Scheduler.step`` —
+  so decode work from every live exploration lands in the same
+  continuous batch (per-sequence sampling settings let greedy
+  verification and high-temperature exploration share a dispatch).
+* **Backpressure, not crashes.**  A ``Fork`` that the page-budget
+  ledger cannot absorb parks the exploration and retries each step:
+  other explorations' commits recycle pages and unblock it.  Only a
+  *provably* stalled system (a driver round in which nothing decoded,
+  admitted, retired or resumed — deterministic, so nothing ever will)
+  throws ``AdmissionDenied`` into the blocked policies, which may then
+  shrink their fan-out or commit what they have.
+* **Nothing leaks.**  When a policy returns (or raises), its request is
+  force-retired through :meth:`Scheduler.finish`: the root subtree is
+  released across every domain and all reservations return to the
+  pool.  N explorations entering always means a drained pool leaving.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
+
+from repro.core.branch import root_context
+from repro.core.errors import BranchError, BranchStateError
+from repro.core.runtime_api import BranchRuntime
+from repro.core.store import BranchStore
+from repro.explore_ctx.context import BranchContext, StateContext
+from repro.runtime.scheduler import AdmissionDenied, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# work items a policy may yield
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Submit:
+    """Queue a request; resumes with the admitted root BranchContext."""
+
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+
+
+@dataclass
+class Fork:
+    """Fork ``n`` children of ``ctx``; resumes with the child contexts.
+
+    Retried with backpressure while the page budget cannot absorb it.
+    """
+
+    ctx: BranchContext
+    n: int
+
+
+@dataclass
+class Decode:
+    """Decode ``tokens`` more tokens on each context, then resume.
+
+    The driver unparks the sequences, tags their sampling settings, and
+    lets the scheduler batch them with everyone else's work; contexts
+    that resolve or hit their request budget early count as done.
+    ``greedy``/``temperature`` may be scalars or per-context rows, so a
+    greedy verifier and sampled drafts decode in ONE wait (and one
+    device batch) — the per-sequence sampling feature's whole point.
+    """
+
+    ctxs: Sequence[BranchContext]
+    tokens: int
+    greedy: Any = False
+    temperature: Any = 1.5
+
+
+@dataclass
+class Tick:
+    """Let the engine run ``steps`` scheduler steps (generic wait)."""
+
+    steps: int = 1
+
+
+# ---------------------------------------------------------------------------
+# waits (internal): when may a parked exploration resume?
+# ---------------------------------------------------------------------------
+
+class _WaitAdmitted:
+    def __init__(self, req_id: int):
+        self.req_id = req_id
+
+    def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
+        try:
+            seq = drv.sched.seq_of(self.req_id)
+        except BranchError:
+            return False, None
+        # the seq was held in the admission transaction (submit(hold=True))
+        return True, drv._bind_root(self.req_id, seq)
+
+
+class _WaitFork:
+    def __init__(self, item: Fork):
+        self.item = item
+        self.attempts = 0
+
+    def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
+        try:
+            kids = self.item.ctx.fork(self.item.n)
+        except AdmissionDenied:
+            self.attempts += 1
+            return False, None
+        return True, kids
+
+
+class _WaitTokens:
+    def __init__(self, item: Decode, targets: Dict[int, int]):
+        self.item = item
+        self.targets = targets   # seq -> produced() target
+
+    def _satisfied(self, drv: "ExplorationDriver", seq: int,
+                   target: int) -> bool:
+        sched = drv.sched
+        if not sched.is_tracked(seq):
+            return True          # resolved / reaped / evicted
+        if not sched.engine.kv.is_live(seq):
+            return True
+        req = sched.request_of(seq)
+        if req is None:
+            return True
+        produced = sched.produced(seq)
+        return produced >= target or produced >= req.max_new_tokens
+
+    def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
+        if not all(self._satisfied(drv, s, t)
+                   for s, t in self.targets.items()):
+            return False, None
+        for seq in self.targets:
+            if drv.sched.is_tracked(seq):
+                drv.sched.hold(seq)   # park again: policy regains control
+        return True, None
+
+
+class _WaitSteps:
+    def __init__(self, until_step: int):
+        self.until_step = until_step
+
+    def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
+        return drv.steps >= self.until_step, None
+
+
+# ---------------------------------------------------------------------------
+# exploration handle
+# ---------------------------------------------------------------------------
+
+class Exploration:
+    """A launched policy: its future result plus bookkeeping."""
+
+    def __init__(self, driver: "ExplorationDriver",
+                 gen: Generator, name: str):
+        self.driver = driver
+        self.gen = gen
+        self.name = name
+        self.req_id: Optional[int] = None
+        self.root: Optional[BranchContext] = None
+        self.wait: Optional[Any] = None
+        self.started = False
+        self.done = False
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.error_reported = False   # raised to a caller exactly once
+        self.final_tokens: Optional[List[int]] = None
+
+    def run(self, max_steps: int = 10_000, **decode_kw: Any) -> Any:
+        """Drive the whole fleet until *this* exploration resolves."""
+        self.driver.run(max_steps=max_steps, until=self, **decode_kw)
+        if self.error is not None:
+            self.error_reported = True
+            raise self.error
+        return self.result
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+class ExplorationDriver:
+    """Multiplexes generator policies over one scheduler."""
+
+    def __init__(self, sched: Scheduler, *,
+                 store: Optional[BranchStore] = None):
+        self.sched = sched
+        self.store = store
+        # composite contexts: the runtime's KV fork is the scheduler's,
+        # so store+KV creates go through page-budget admission together
+        self.runtime = (BranchRuntime.scheduled(store, sched)
+                        if store is not None else None)
+        self._state_root: Optional[StateContext] = (
+            root_context(store) if store is not None else None)
+        self._live: List[Exploration] = []
+        self.explorations: List[Exploration] = []
+        self.steps = 0
+
+    # -- launching ------------------------------------------------------
+    def launch(self, gen: Generator, *, name: str = "") -> Exploration:
+        """Register a policy generator; it starts on the next step."""
+        exp = Exploration(self, gen, name or f"exploration-{len(self.explorations)}")
+        self._live.append(exp)
+        self.explorations.append(exp)
+        return exp
+
+    def explore(self, prompt: Sequence[int], max_new_tokens: int,
+                policy: Any, *, name: str = "",
+                **policy_kw: Any) -> Exploration:
+        """One-liner: submit ``prompt`` and run ``policy`` on its root."""
+
+        def wrapper() -> Generator:
+            ctx = yield Submit(prompt, max_new_tokens)
+            return (yield from policy(ctx, **policy_kw))
+
+        return self.launch(wrapper(), name=name or getattr(
+            policy, "__name__", "policy"))
+
+    def _bind_root(self, req_id: int, seq: int) -> BranchContext:
+        state = None
+        if self._state_root is not None:
+            # each exploration explores inside its own store subtree, so
+            # concurrent explorations never race each other's epoch CAS
+            (state,) = self._state_root.fork(1)
+        return BranchContext(self.sched, seq, req_id=req_id,
+                             runtime=self.runtime, state=state)
+
+    # -- stepping -------------------------------------------------------
+    def _advance(self, exp: Exploration, value: Any = None,
+                 error: Optional[BaseException] = None) -> None:
+        """Run one exploration's host code until it blocks again."""
+        while True:
+            try:
+                if error is not None:
+                    err, error = error, None
+                    item = exp.gen.throw(err)
+                elif not exp.started:
+                    exp.started = True
+                    item = next(exp.gen)
+                else:
+                    item = exp.gen.send(value)
+            except StopIteration as stop:
+                self._finalize(exp, stop.value)
+                return
+            except BaseException as err:   # policy bug: fail + clean up
+                self._fail(exp, err)
+                return
+
+            if isinstance(item, Submit):
+                try:
+                    exp.req_id = self.sched.submit(
+                        list(item.prompt), item.max_new_tokens, hold=True)
+                except AdmissionDenied as err:
+                    # can NEVER fit: not backpressure — the policy decides
+                    value, error = None, err
+                    continue
+                self.sched.admit()   # admit eagerly if pages allow
+                exp.wait = _WaitAdmitted(exp.req_id)
+                ok, value = exp.wait.poll(self)   # may admit immediately
+                if ok:
+                    exp.root = value
+                    exp.wait = None
+                    continue
+                return
+            elif isinstance(item, Fork):
+                try:
+                    value = item.ctx.fork(item.n)
+                    continue
+                except AdmissionDenied:
+                    exp.wait = _WaitFork(item)    # backpressure: retry
+                    return
+                except BranchError as err:
+                    # forking a resolved/evicted context is a policy-level
+                    # condition: deliver it to the generator, not the run
+                    value, error = None, err
+                    continue
+            elif isinstance(item, Decode):
+                k = len(item.ctxs)
+                g_row = (list(item.greedy) if isinstance(
+                    item.greedy, (list, tuple)) else [item.greedy] * k)
+                t_row = (list(item.temperature) if isinstance(
+                    item.temperature, (list, tuple))
+                    else [item.temperature] * k)
+                if len(g_row) != k or len(t_row) != k:
+                    value, error = None, ValueError(
+                        "Decode sampling rows must match its contexts")
+                    continue
+                targets: Dict[int, int] = {}
+                for ctx, g, t in zip(item.ctxs, g_row, t_row):
+                    seq = ctx.seq
+                    if not self.sched.is_tracked(seq):
+                        continue   # already resolved: nothing to decode
+                    self.sched.set_sampling(seq, greedy=g, temperature=t)
+                    self.sched.unhold(seq)
+                    targets[seq] = self.sched.produced(seq) + item.tokens
+                if not targets:
+                    value = None
+                    continue
+                exp.wait = _WaitTokens(item, targets)
+                return
+            elif isinstance(item, Tick):
+                exp.wait = _WaitSteps(self.steps + item.steps)
+                return
+            else:
+                value, error = None, TypeError(
+                    f"policy yielded {item!r}; expected Submit/Fork/"
+                    "Decode/Tick")
+
+    def _cleanup(self, exp: Exploration) -> None:
+        if exp.req_id is not None:
+            if not self.sched.finished(exp.req_id):
+                self.sched.finish(exp.req_id)
+            if self.sched.peek_result(exp.req_id) is not None:
+                exp.final_tokens = self.sched.result(exp.req_id)
+        # composite mode: the per-exploration store subtree is done —
+        # abort + reap it so a long-running driver's store stays bounded
+        # (a policy that wants state to outlive its exploration must
+        # surface it through its return value before finishing)
+        if exp.root is not None and exp.root.state is not None \
+                and self.store is not None:
+            state = exp.root.state
+            try:
+                if state.is_active:
+                    state.abort()
+            except BranchStateError:
+                pass
+            self.store.reap(state.branch_id)
+
+    def _finalize(self, exp: Exploration, result: Any) -> None:
+        exp.result = result
+        exp.done = True
+        exp.wait = None
+        self._live.remove(exp)
+        self._cleanup(exp)
+
+    def _fail(self, exp: Exploration, err: BaseException) -> None:
+        exp.error = err
+        exp.done = True
+        exp.wait = None
+        self._live.remove(exp)
+        self._cleanup(exp)   # release the subtree: no stranded reservations
+
+    def step(self, **decode_kw: Any) -> Dict[str, Any]:
+        """One round: resume ready explorations, then one scheduler step."""
+        self.sched.admit()   # admit first so _WaitAdmitted binds + holds
+        resumed = 0
+        for exp in list(self._live):
+            if exp.done:
+                continue
+            if exp.wait is None:
+                self._advance(exp)
+                resumed += 1
+            else:
+                try:
+                    ok, value = exp.wait.poll(self)
+                except Exception as err:
+                    # a wait that can never be satisfied (its context was
+                    # evicted/resolved underneath it) fails into the
+                    # policy, not the driver loop
+                    exp.wait = None
+                    self._advance(exp, error=err)
+                    resumed += 1
+                    continue
+                if ok:
+                    exp.wait = None
+                    if isinstance(value, BranchContext) and exp.root is None:
+                        exp.root = value
+                    self._advance(exp, value)
+                    resumed += 1
+        st = self.sched.step(**decode_kw)
+        st["resumed"] = resumed
+        st["live_explorations"] = len(self._live)
+        self.steps += 1
+        return st
+
+    def run(self, max_steps: int = 10_000, *,
+            until: Optional[Exploration] = None,
+            raise_errors: bool = True, **decode_kw: Any) -> List[Exploration]:
+        """Step until every exploration (or ``until``) resolves."""
+        decode_kw = dict(decode_kw)
+        key = decode_kw.pop("key", None)
+        if key is not None:
+            # one key must not reach every step (identical sampling
+            # noise each round): it reseeds the scheduler's stream
+            self.sched.seed_sampling(key)
+        stalled = 0
+        for _ in range(max_steps):
+            if not self._live or (until is not None and until.done):
+                break
+            st = self.step(**decode_kw)
+            if st["resumed"] or st["decoded"] or st["admitted"] \
+                    or st["retired"]:
+                stalled = 0
+                continue
+            if any(isinstance(e.wait, _WaitSteps) for e in self._live):
+                continue   # a Tick always resolves: steps advance
+            # A fully idle round is deterministic: nothing will change on
+            # its own.  Kick ONE fork-blocked policy with a permanent
+            # -EAGAIN (it may shrink its fan-out or degrade to unforked
+            # decoding, freeing pages for the rest); if nobody is
+            # fork-blocked, the stall is unrecoverable.
+            stalled += 1
+            if self._kick_stalled():
+                stalled = 0
+            elif stalled > 1:
+                blocked = [e.name for e in self._live]
+                raise RuntimeError(
+                    f"exploration driver stalled; blocked: {blocked}")
+        else:
+            if self._live and (until is None or not until.done):
+                raise RuntimeError(
+                    f"driver exceeded max_steps={max_steps} with "
+                    f"{len(self._live)} explorations live")
+        if raise_errors:
+            if until is not None:
+                # the caller awaits ONE exploration: only its error is
+                # theirs; other failures surface on their own run calls
+                if until.error is not None and not until.error_reported:
+                    until.error_reported = True
+                    raise until.error
+            else:
+                for exp in self.explorations:
+                    if exp.error is not None and not exp.error_reported:
+                        exp.error_reported = True
+                        raise exp.error
+        return self.explorations
+
+    def _kick_stalled(self) -> int:
+        """Throw -EAGAIN into ONE fork-blocked policy on a proven stall."""
+        for exp in list(self._live):
+            if isinstance(exp.wait, _WaitFork):
+                wait, exp.wait = exp.wait, None
+                self._advance(exp, error=AdmissionDenied(
+                    f"fork({wait.item.ctx.seq}, n={wait.item.n}) cannot be "
+                    f"admitted after {wait.attempts} retries and no other "
+                    "exploration can free pages (-EAGAIN, permanent)"))
+                return 1
+        return 0
+
+
+__all__ = ["Decode", "Exploration", "ExplorationDriver", "Fork",
+           "Submit", "Tick"]

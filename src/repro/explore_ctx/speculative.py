@@ -1,0 +1,133 @@
+"""Speculative exploration — drafts verified against a target.
+
+Two faces of the same fork/explore/commit pattern:
+
+* :func:`speculative_decode` — the serving policy.  One fork group holds
+  a greedy **verifier** branch (the target's own continuation) and N
+  sampled **draft** branches.  After decoding, each draft is verified by
+  longest-common-prefix against the verifier; the winning draft is
+  truncated to its verified prefix and committed (KV pages + token tail
+  shrink together), or the verifier commits when nothing verified.  In a
+  deployment the drafts come from a cheaper model and the verifier pass
+  is one batched forward; here both share the engine, so the policy
+  demonstrates lifecycle + truncation semantics, not a speedup.
+* :class:`SpeculativeTrainer` — the training port
+  (``examples/speculative_train.py``).  Every step forks K candidate
+  update branches *inside one jitted program* (stacked leading axis —
+  there is no process to signal on a TPU), runs them in parallel, and
+  first-commit-wins selects the update with the best validation loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Generator, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.errors import BranchError
+from repro.core.explore import explore
+from repro.explore_ctx.context import BranchContext, policy_result
+from repro.explore_ctx.driver import Decode, Fork
+from repro.explore_ctx.scoring import lcp_len
+
+
+def speculative_decode(ctx: BranchContext, *, n_drafts: int = 3,
+                       draft_tokens: int = 8,
+                       temperature: float = 1.5) -> Generator:
+    """Draft/verify/commit-the-longest-verified-prefix, as a policy."""
+    try:
+        kids = yield Fork(ctx, n_drafts + 1)
+    except BranchError:   # includes AdmissionDenied
+        # permanent page pressure (or a root resolved underneath us):
+        # plain greedy decode, no speculation
+        yield Decode([ctx], draft_tokens, greedy=True)
+        return policy_result(ctx, committed=False,
+                             policy="speculative_decode", degraded=True,
+                             drafts=0, accepted=0)
+    verifier, drafts = kids[0], list(kids[1:])
+    # ONE wait, one continuous batch: the greedy verifier lane decodes
+    # alongside the sampled drafts (per-sequence sampling rows)
+    yield Decode(kids, draft_tokens,
+                 greedy=[True] + [False] * len(drafts),
+                 temperature=[1.0] + [temperature] * len(drafts))
+    target = verifier.generated()
+    verified = [lcp_len(d.generated(), target) for d in drafts]
+    best = max(range(len(drafts)), key=lambda i: verified[i])
+    accepted = verified[best]
+    fallback = accepted == 0
+    if fallback:
+        winner = verifier                # every draft diverged at once:
+    else:                                # the target's own tokens commit
+        winner = drafts[best]
+        if accepted < len(winner.generated()):
+            winner.truncate(accepted)    # keep only the verified prefix
+    winner.commit()
+    # 'accepted' counts only draft tokens that verified — a verifier
+    # fallback is an honest 0% acceptance, not a perfect run
+    return policy_result(
+        ctx, score=float(accepted),
+        policy="speculative_decode", drafts=n_drafts,
+        draft_tokens=draft_tokens, accepted=accepted, fallback=fallback,
+        verified_per_draft=verified,
+        acceptance_rate=accepted / max(draft_tokens, 1))
+
+
+class SpeculativeTrainer:
+    """Fork-K-updates/commit-best training, packaged.
+
+    ``step`` runs one fork/explore/commit round fully inside jit: each
+    branch applies the gradient scaled by an independently sampled
+    learning-rate multiplier, success is a finite validation loss, and
+    the branch with the earliest commit-time (here: lowest val loss)
+    wins.  If every branch diverges the frozen origin resumes unchanged
+    — the paper's "if all branches abort, the parent resumes".
+    """
+
+    def __init__(self, model: Any, opt: Any, *, n_branches: int = 4,
+                 lr_scale_base: float = 0.25, lr_scale_steps: int = 4):
+        from repro.optim import apply_updates
+
+        self.model = model
+        self.opt = opt
+        self.n_branches = n_branches
+
+        def one_branch(state, key, batch, val_batch):
+            lr_scale = lr_scale_base * (
+                2.0 ** jax.random.randint(key, (), 0, lr_scale_steps)
+                .astype(jnp.float32))
+
+            def loss_fn(p):
+                return model.loss(p, batch)[0]
+
+            grads = jax.grad(loss_fn)(state["params"])
+            grads = jax.tree_util.tree_map(lambda g: g * lr_scale, grads)
+            updates, new_opt = opt.update(grads, state["opt"],
+                                          state["params"])
+            new_params = apply_updates(state["params"], updates)
+            val = model.loss(new_params, val_batch)[0]
+            return ({"params": new_params, "opt": new_opt},
+                    jnp.isfinite(val), val)
+
+        @jax.jit
+        def spec_step(state, key, batch, val_batch):
+            return explore(
+                lambda s, k: one_branch(s, k, batch, val_batch),
+                state, n_branches, key, commit_time_fn=lambda a: a)
+
+        self._spec_step = spec_step
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        params = self.model.init(key)
+        return {"params": params, "opt": self.opt.init(params)}
+
+    def step(self, state: Dict[str, Any], key: jax.Array, batch: Any,
+             val_batch: Any) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        res = self._spec_step(state, key, batch, val_batch)
+        info = {"winner": int(res.winner),
+                "committed": bool(res.committed),
+                "val_losses": [float(v) for v in res.aux]}
+        return res.state, info
+
+
+__all__ = ["SpeculativeTrainer", "speculative_decode"]

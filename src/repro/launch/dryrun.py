@@ -161,6 +161,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     mem = compiled.memory_analysis()
     print(f"memory_analysis: {mem}")        # proves it fits
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # some jax/XLA versions return
+        cost = cost[0] if cost else {}    # one dict per program
     print(f"cost_analysis (xla, while-body-once, per-device): "
           f"flops={cost.get('flops', 0.0):.3e} "
           f"bytes={cost.get('bytes accessed', 0.0):.3e}")

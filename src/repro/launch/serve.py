@@ -1,9 +1,10 @@
 """Serving entry point: scheduler-driven branchable paged-KV engine.
 
-Demo mode pushes a stream of requests through the :class:`Scheduler`
-(admission + continuous batching) with N-way agentic exploration per
-prompt: fork (page-budget-aware), decode branches in the running batch,
-score, first-commit-wins commit::
+Demo mode pushes a stream of requests through the exploration driver:
+every prompt runs a concurrent best-of-N policy (fork through
+page-budget admission, decode branches in the shared continuous batch,
+score, first-commit-wins commit; graceful unforked degradation under
+page pressure)::
 
     python -m repro.launch.serve --arch paper-agentic --branches 3
 """
@@ -28,9 +29,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced
+    from repro.explore_ctx import ExplorationDriver, best_of_n
     from repro.models.model import Model
-    from repro.runtime.scheduler import (
-        AdmissionDenied, Scheduler, SchedulerConfig)
+    from repro.runtime.scheduler import Scheduler, SchedulerConfig
     from repro.runtime.serve_loop import ServeEngine
 
     cfg = get_config(args.arch)
@@ -41,42 +42,35 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=1024, page_size=8,
                          max_pages_per_seq=64)
-    sched = Scheduler(engine, SchedulerConfig(max_batch=args.max_batch))
+    sched = Scheduler(engine, SchedulerConfig(max_batch=args.max_batch,
+                                              seed=1))
+    driver = ExplorationDriver(sched)
 
-    key = jax.random.PRNGKey(1)
-    roots = {}
+    prompts = {}
     for r in range(args.requests):
         prompt = [int(t) for t in np.random.default_rng(r).integers(
             1, cfg.vocab_size, size=6)]
-        # decode budget covers the exploration tokens; the scheduler
-        # admits when the page pool can hold prompt + reserve
-        rid = sched.submit(prompt, max_new_tokens=args.tokens + 1)
-        roots[rid] = prompt
-    sched.admit()
+        exp = driver.explore(prompt, max_new_tokens=args.tokens + 1,
+                             policy=best_of_n, n=args.branches,
+                             tokens=args.tokens,
+                             temperature=args.temperature,
+                             name=f"request-{r}")
+        prompts[exp] = prompt
+    # an infeasible request fails only its own exploration: report it
+    # per-request (as the pre-driver demo did) and serve the rest
+    driver.run(raise_errors=False)
 
-    for rid, prompt in roots.items():
-        try:
-            root = sched.seq_of(rid)
-        except Exception as e:
-            print(f"request {rid}: not admitted ({e}); skipped")
+    for r, (exp, prompt) in enumerate(prompts.items()):
+        if exp.error is not None:
+            print(f"request {r}: not served ({exp.error}); skipped")
             continue
-        try:
-            branches = sched.fork(root, args.branches)
-        except AdmissionDenied as e:
-            print(f"request {rid}: fork denied ({e}); decoding unforked")
-            branches = [root]
-        for _ in range(args.tokens):
-            key, k = jax.random.split(key)
-            engine.decode(branches, greedy=False,
-                          temperature=args.temperature, key=k)
-        scores = [float(np.mean(engine.tokens(b)[len(prompt):]))
-                  for b in branches]
-        best = branches[int(np.argmax(scores))]
-        if best != root:
-            engine.commit(best)
-        print(f"request {rid}: prompt {prompt} -> "
-              f"{engine.tokens(root)[len(prompt):]} "
-              f"(best of {len(branches)}, scores {scores})")
+        res = exp.result
+        scores = [f"{s:.1f}" for s in res.stats.get("scores", [])]
+        note = " (degraded: page pressure)" if res.stats.get("degraded") \
+            else ""
+        print(f"request {r}: prompt {prompt} -> {res.generated} "
+              f"(best of {res.stats.get('branches', 0)}, "
+              f"scores {scores}){note}")
     print(f"scheduler stats: {sched.stats()}")
     return 0
 

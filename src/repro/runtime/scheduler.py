@@ -58,6 +58,7 @@ class AdmissionDenied(BranchError):
 @dataclass
 class SchedulerConfig:
     max_batch: int = 8          # device batch width per decode dispatch
+    seed: int = 0               # scheduler-owned PRNG for sampled decode
 
 
 @dataclass
@@ -69,6 +70,7 @@ class Request:
     max_new_tokens: int
     worst_pages: int = 0               # pages_for(prompt + max_new_tokens)
     seq: Optional[int] = None          # assigned at admission
+    hold_on_admit: bool = False        # park immediately (explorations)
 
 
 class Scheduler:
@@ -88,6 +90,13 @@ class Scheduler:
         self._reserved: Dict[int, int] = {}
         # finished token lists, claimed one-shot via result()
         self._results: Dict[int, List[int]] = {}
+        # sequences parked by an exploration driver: tracked (they keep
+        # their reservations) but neither decoded nor auto-retired until
+        # released — the policy, not the budget, decides their pace
+        self._holds: set = set()
+        # per-sequence sampling overrides: seq -> (greedy, temperature)
+        self._sampling: Dict[int, tuple] = {}
+        self._key = jax.random.PRNGKey(self.config.seed)
         self.steps = 0
         self.tokens_generated = 0
 
@@ -100,8 +109,14 @@ class Scheduler:
     def _pages_reserved(self) -> int:
         return sum(self._reserved.values())
 
-    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16,
+               *, hold: bool = False) -> int:
         """Queue a request; it is admitted when the page budget allows.
+
+        With ``hold=True`` the admitted root is parked in the same
+        admission transaction — it never decodes a token until its owner
+        (an exploration policy) releases it, regardless of where in a
+        scheduler step the admission lands.
 
         A request that could never run to completion — its worst case
         (prompt + full decode budget) exceeds the pool even entirely
@@ -120,7 +135,8 @@ class Scheduler:
                 f"table holds at most {self.engine.max_pages}; it can "
                 "never decode to completion")
         req = Request(req_id=next(self._req_ids), prompt=list(prompt),
-                      max_new_tokens=max_new_tokens, worst_pages=worst)
+                      max_new_tokens=max_new_tokens, worst_pages=worst,
+                      hold_on_admit=hold)
         self._requests[req.req_id] = req
         self._waiting.append(req)
         return req.req_id
@@ -137,12 +153,34 @@ class Scheduler:
             req.seq = self.engine.add_request(req.prompt)
             self._seq_owner[req.seq] = req.req_id
             self._reserved[req.seq] = req.worst_pages
+            if req.hold_on_admit:
+                self._holds.add(req.seq)
             admitted.append(req.req_id)
         return admitted
 
     # ------------------------------------------------------------------
     # fork admission
     # ------------------------------------------------------------------
+    def _fork_cost(self, seq: int, n: int) -> tuple:
+        """(worst-case pages ``fork(seq, n)`` needs, current free budget)."""
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        req = self._requests[self._seq_owner[seq]]
+        table_len = len(self.engine.kv.block_table(seq))
+        child_cost = req.worst_pages - table_len + 1
+        budget = self.engine.kv.num_pages - self._pages_reserved()
+        return n * child_cost, budget
+
+    def can_fork(self, seq: int, n: int) -> bool:
+        """Whether ``fork(seq, n)`` would be admitted right now.
+
+        Side-effect free: composite creates use it to check the cheap
+        ledger BEFORE forking other domains, so a backpressure retry
+        loop does not churn (fork + unwind) the store tree every round.
+        """
+        needed, budget = self._fork_cost(seq, n)
+        return needed <= budget
+
     def fork(self, seq: int, n: int) -> List[int]:
         """Fork ``n`` exploration branches if the page budget allows.
 
@@ -153,22 +191,67 @@ class Scheduler:
         reservation (it holds its pages and resumes when the children
         resolve), so shared pages are never double-booked.
         """
-        if seq not in self._seq_owner:
-            raise BranchError(f"sequence {seq} is not scheduled here")
-        req = self._requests[self._seq_owner[seq]]
-        table_len = len(self.engine.kv.block_table(seq))
-        child_cost = req.worst_pages - table_len + 1
-        budget = self.engine.kv.num_pages - self._pages_reserved()
-        if n * child_cost > budget:
+        needed, budget = self._fork_cost(seq, n)
+        if needed > budget:
             raise AdmissionDenied(
-                f"fork({seq}, n={n}) needs up to {n * child_cost} free "
+                f"fork({seq}, n={n}) needs up to {needed} free "
                 f"pages, budget is {budget} (-EAGAIN)")
+        child_cost = needed // n
         children = self.engine.fork(seq, n)
         owner = self._seq_owner[seq]
         for c in children:
             self._seq_owner[c] = owner
             self._reserved[c] = child_cost
+            # children inherit the origin's pacing and sampling so an
+            # exploration's subtree stays under its driver's control
+            if seq in self._holds:
+                self._holds.add(c)
+            if seq in self._sampling:
+                self._sampling[c] = self._sampling[seq]
         return children
+
+    # ------------------------------------------------------------------
+    # exploration pacing (holds + per-sequence sampling)
+    # ------------------------------------------------------------------
+    def hold(self, seq: int) -> None:
+        """Park a tracked sequence: no decode, no auto-retire."""
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        self._holds.add(seq)
+
+    def unhold(self, seq: int) -> None:
+        self._holds.discard(seq)
+
+    def is_held(self, seq: int) -> bool:
+        return seq in self._holds
+
+    def set_sampling(self, seq: int, *, greedy: bool = True,
+                     temperature: float = 1.0) -> None:
+        """Per-sequence decode settings applied by :meth:`step`."""
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        self._sampling[seq] = (bool(greedy), float(temperature))
+
+    def produced(self, seq: int) -> int:
+        """Tokens generated beyond the owning request's prompt."""
+        req = self._requests[self._seq_owner[seq]]
+        return self.engine.kv.length(seq) + 1 - len(req.prompt)
+
+    def is_tracked(self, seq: int) -> bool:
+        """Whether this scheduler may still decode ``seq``."""
+        return seq in self._seq_owner
+
+    def request_of(self, seq: int) -> Optional[Request]:
+        """The owning request of a tracked sequence (None if untracked
+        or the request record is already gone)."""
+        rid = self._seq_owner.get(seq)
+        return None if rid is None else self._requests.get(rid)
+
+    def peek_result(self, req_id: int) -> Optional[List[int]]:
+        """A finished request's tokens without claiming them (None while
+        pending or after the one-shot :meth:`result` claim)."""
+        res = self._results.get(req_id)
+        return None if res is None else list(res)
 
     # ------------------------------------------------------------------
     # continuous batching
@@ -188,6 +271,8 @@ class Scheduler:
     def _untrack(self, seq: int) -> None:
         rid = self._seq_owner.pop(seq, None)
         self._reserved.pop(seq, None)
+        self._holds.discard(seq)
+        self._sampling.pop(seq, None)
         if rid is not None:
             req = self._requests.get(rid)
             if req is not None and req.seq == seq:
@@ -252,19 +337,28 @@ class Scheduler:
         """
         admitted = self.admit()
         batch = [s for s in self.runnable()
-                 if not self._request_done(
+                 if s not in self._holds and not self._request_done(
                      self._requests[self._seq_owner[s]], s)]
         decoded = 0
         for lo in range(0, len(batch), self.config.max_batch):
             group = batch[lo: lo + self.config.max_batch]
+            g_row = [self._sampling.get(s, (greedy, temperature))[0]
+                     for s in group]
+            t_row = [self._sampling.get(s, (greedy, temperature))[1]
+                     for s in group]
             sub = None
-            if key is not None:
-                key, sub = jax.random.split(key)
-            self.engine.decode(group, greedy=greedy,
-                               temperature=temperature, key=sub)
+            if not all(g_row):
+                if key is not None:
+                    key, sub = jax.random.split(key)
+                else:
+                    self._key, sub = jax.random.split(self._key)
+            self.engine.decode(group, greedy=g_row,
+                               temperature=t_row, key=sub)
             decoded += len(group)
         retired = 0
         for seq in self.runnable():   # re-asks the kernel; purges resolved
+            if seq in self._holds:
+                continue   # an exploration owns this sequence's pace
             req = self._requests.get(self._seq_owner[seq])
             if req is not None and self._request_done(req, seq):
                 self._retire(seq)
@@ -280,14 +374,79 @@ class Scheduler:
             "running": len(self._seq_owner),
         }
 
+    def seed_sampling(self, key: jax.Array) -> None:
+        """Reseed the scheduler-owned PRNG stream for sampled decode."""
+        self._key = key
+
+    def _absorb_key(self, decode_kw: Dict[str, Any]) -> Dict[str, Any]:
+        """Fold a caller key into the scheduler's own PRNG stream.
+
+        Repeated-step APIs must not pass one key to every step — each
+        step would derive identical sampling noise.  Seeding the
+        internal key instead gives every step a fresh split.
+        """
+        key = decode_kw.pop("key", None)
+        if key is not None:
+            self.seed_sampling(key)
+        return decode_kw
+
     def run(self, max_steps: int = 1000, **decode_kw: Any) -> int:
         """Step until no work remains; returns tokens generated."""
+        decode_kw = self._absorb_key(decode_kw)
         t0 = self.tokens_generated
         for _ in range(max_steps):
             st = self.step(**decode_kw)
             if st["decoded"] == 0 and st["waiting"] == 0:
                 break
         return self.tokens_generated - t0
+
+    # ------------------------------------------------------------------
+    # completion / wait primitives
+    # ------------------------------------------------------------------
+    def finished(self, req_id: int) -> bool:
+        """True once the request can no longer produce more tokens —
+        its result is claimable (or was already claimed / evicted)."""
+        return req_id not in self._requests
+
+    def finish(self, req_id: int) -> None:
+        """Force-retire a request now (exploration decided it is done).
+
+        The paper's commit-terminates-the-search: a policy that committed
+        its winner before the decode budget ran out retires the request
+        early instead of letting continuous batching keep decoding the
+        root.  Captures the result, releases the root's whole subtree
+        across every domain, and frees all its reservations.  A request
+        still waiting in the FIFO is cancelled with an empty result;
+        finishing an unknown/finished request is a no-op.
+        """
+        req = self._requests.pop(req_id, None)
+        if req is None:
+            return
+        if req.seq is None:
+            self._waiting.remove(req)
+            self._results[req_id] = []
+            return
+        if req.seq in self.engine.kv.tree:
+            self._results[req_id] = self.engine.tokens(req.seq)
+            self.engine.release(req.seq)   # invalidates + reaps subtree
+        else:
+            self._results[req_id] = []
+        for s in list(self._seq_owner):
+            if s not in self.engine.kv.tree:
+                self._untrack(s)
+
+    def wait(self, req_id: int, max_steps: int = 1000,
+             **decode_kw: Any) -> List[int]:
+        """Step the scheduler until ``req_id`` finishes; claim its result."""
+        decode_kw = self._absorb_key(decode_kw)
+        for _ in range(max_steps):
+            if self.finished(req_id):
+                break
+            self.step(**decode_kw)
+        if not self.finished(req_id):
+            raise BranchError(
+                f"request {req_id} did not finish in {max_steps} steps")
+        return self.result(req_id)
 
     # ------------------------------------------------------------------
     def result(self, req_id: int) -> List[int]:
@@ -315,6 +474,7 @@ class Scheduler:
         st = self.engine.stats()
         st.update(steps=self.steps, tokens_generated=self.tokens_generated,
                   waiting=len(self._waiting), running=len(self._seq_owner),
+                  held=len(self._holds),
                   pages_reserved=self._pages_reserved())
         return st
 

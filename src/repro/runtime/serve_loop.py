@@ -173,6 +173,9 @@ class TokenDomain:
     def append(self, seq: int, token: int) -> None:
         self._tokens[seq].append(token)
 
+    def truncate(self, seq: int, n_tokens: int) -> None:
+        del self._tokens[seq][n_tokens:]
+
     def __contains__(self, seq: int) -> bool:
         return seq in self._tokens
 
@@ -256,6 +259,19 @@ class ServeEngine:
         """Evict a finished/abandoned sequence, freeing every domain."""
         self.kv.release(seq)
 
+    def truncate(self, seq: int, n_tokens: int) -> None:
+        """Keep only the first ``n_tokens`` tokens of a sequence.
+
+        The speculative-decoding primitive: a draft branch commits its
+        verified prefix by dropping the unverified suffix first.  Both
+        domains shrink together, preserving ``kv.length == tokens - 1``
+        (the last retained token becomes the pending one).
+        """
+        if n_tokens < 1:
+            raise ValueError("cannot truncate below one token")
+        self.kv.truncate(seq, n_tokens - 1)
+        self.token_domain.truncate(seq, n_tokens)
+
     # ------------------------------------------------------------------
     def _service_cow(self, src: List[int], dst: List[int]) -> None:
         """Service all pending CoW faults in one fused device dispatch."""
@@ -265,10 +281,28 @@ class ServeEngine:
         self.cow_dispatches += 1
         self.cow_faults += len(src)
 
-    def decode(self, seq_ids: Sequence[int], *, greedy: bool = True,
-               temperature: float = 1.0,
+    def decode(self, seq_ids: Sequence[int], *, greedy: Any = True,
+               temperature: Any = 1.0,
                key: Optional[jax.Array] = None) -> List[int]:
-        """One token for each sequence (they decode as one batch)."""
+        """One token for each sequence (they decode as one batch).
+
+        ``greedy`` and ``temperature`` may be scalars (whole batch) or
+        per-sequence lists, so one continuous batch can mix greedy
+        verification branches with sampled exploration branches at
+        different temperatures — the exploration driver multiplexes many
+        policies' decode work into a single device dispatch.
+        """
+        b = len(seq_ids)
+        # resolve sampling rows BEFORE any metadata mutates: a mis-sized
+        # per-sequence list must fail cleanly, not after slots were
+        # reserved and the device step ran
+        greedy_row = ([bool(greedy)] * b if isinstance(greedy, (bool, int))
+                      else [bool(g) for g in greedy])
+        temp_row = ([float(temperature)] * b
+                    if isinstance(temperature, (int, float))
+                    else [float(t) for t in temperature])
+        if len(greedy_row) != b or len(temp_row) != b:
+            raise ValueError("per-sequence sampling rows must match batch")
         lengths_before = np.array([self.kv.length(s) for s in seq_ids],
                                   np.int32)
         # refuse BEFORE mutating metadata if any sequence's table would
@@ -306,11 +340,14 @@ class ServeEngine:
             last_tokens, impl=self.attn_impl,
         )
         logits = logits[:, 0]
-        if greedy:
+        if all(greedy_row):
             nxt = jnp.argmax(logits, axis=-1)
         else:
             assert key is not None
-            nxt = jax.random.categorical(key, logits / temperature)
+            temps = jnp.asarray(temp_row, jnp.float32)
+            sampled = jax.random.categorical(key, logits / temps[:, None])
+            nxt = jnp.where(jnp.asarray(greedy_row),
+                            jnp.argmax(logits, axis=-1), sampled)
         out = [int(t) for t in np.asarray(nxt)]
         for s, t in zip(seq_ids, out):
             self.token_domain.append(s, t)

@@ -1,0 +1,530 @@
+"""BranchContext subsystem: policies, driver multiplexing, nesting.
+
+The acceptance bar for the exploration layer:
+
+* every policy (best-of-N, beam, tree, speculative) runs through
+  scheduler admission end-to-end and leaves a drained pool;
+* >= 8 interleaved explorations race one scheduler without stranded
+  reservations (the pool returns to empty after all resolve);
+* aborting a parent context invalidates grandchildren across every
+  domain (KV pages, token tails, and the composite store);
+* permanent page pressure degrades policies instead of crashing them.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import BranchStore
+from repro.core.lifecycle import BranchStatus
+from repro.models.model import Model
+from repro.runtime.scheduler import AdmissionDenied, Scheduler, SchedulerConfig
+from repro.runtime.serve_loop import ServeEngine
+from repro.explore_ctx import (
+    BranchContext,
+    Decode,
+    ExplorationDriver,
+    Fork,
+    Submit,
+    beam_search,
+    best_of_n,
+    lcp_len,
+    speculative_decode,
+    tree_search,
+)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def fresh_engine(engine_setup, **kw):
+    cfg, model, params = engine_setup
+    kw.setdefault("num_pages", 128)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_pages_per_seq", 16)
+    return ServeEngine(model, params, **kw)
+
+
+def fresh_driver(engine_setup, *, store=None, **kw):
+    eng = fresh_engine(engine_setup, **kw)
+    sched = Scheduler(eng, SchedulerConfig(max_batch=8, seed=3))
+    return eng, sched, ExplorationDriver(sched, store=store)
+
+
+def assert_drained(sched):
+    st = sched.stats()
+    assert st["pages_free"] == st["pages_total"]
+    assert st["pages_reserved"] == 0
+    assert st["running"] == 0 and st["held"] == 0
+    assert st["token_tails"] == 0
+    assert len(sched.engine.kv.tree) == 0
+
+
+# ---------------------------------------------------------------------------
+# policies end-to-end through admission
+# ---------------------------------------------------------------------------
+
+def test_best_of_n_end_to_end(engine_setup):
+    eng, sched, drv = fresh_driver(engine_setup)
+    exp = drv.explore([7, 3, 9], 8, best_of_n, n=3, tokens=4)
+    res = exp.run()
+    assert res.committed
+    assert len(res.generated) == 4
+    assert res.stats["branches"] == 3
+    assert res.score == max(res.stats["scores"])
+    assert exp.final_tokens == res.tokens   # finish() captured the same
+    assert_drained(sched)
+
+
+def test_beam_search_commits_per_level(engine_setup):
+    eng, sched, drv = fresh_driver(engine_setup)
+    res = drv.explore([5, 5, 5], 9, beam_search, width=2, depth=2,
+                      tokens_per_level=4).run()
+    assert len(res.generated) == 8          # depth * tokens_per_level
+    assert len(res.stats["levels"]) == 2
+    assert all(len(lv["scores"]) == 2 for lv in res.stats["levels"])
+    assert_drained(sched)
+
+
+def test_tree_search_nested_expansion(engine_setup):
+    eng, sched, drv = fresh_driver(engine_setup)
+    res = drv.explore([2, 4, 6], 13, tree_search, fan_out=2, max_nodes=6,
+                      tokens_per_node=3, max_depth=3).run()
+    assert res.committed
+    assert res.stats["branches_created"] == 6
+    depth = res.stats["winner_depth"]
+    assert 1 <= depth <= 3
+    assert len(res.generated) == 3 * depth  # the whole winning lineage
+    assert_drained(sched)
+
+
+def test_tree_search_early_abort_prunes(engine_setup):
+    eng, sched, drv = fresh_driver(engine_setup)
+    res = drv.explore([2, 4, 6], 13, tree_search, fan_out=3, max_nodes=6,
+                      tokens_per_node=3, prune_below=1e9).run()
+    # impossible bar: every branch pruned on the spot, origin kept
+    assert not res.committed
+    assert res.stats["pruned"] == res.stats["branches_created"]
+    assert res.generated == []
+    assert_drained(sched)
+
+
+def test_speculative_decode_verified_prefix(engine_setup):
+    eng, sched, drv = fresh_driver(engine_setup)
+    res = drv.explore([9, 8, 7], 10, speculative_decode, n_drafts=2,
+                      draft_tokens=5, temperature=2.0).run()
+    accepted = res.stats["accepted"]
+    assert 0 <= accepted <= 5
+    if res.stats["fallback"]:
+        # honest 0% acceptance: the verifier's own tokens committed
+        assert accepted == 0 and len(res.generated) == 5
+    else:
+        assert len(res.generated) == accepted   # the verified prefix
+    assert res.stats["acceptance_rate"] == accepted / 5
+    assert_drained(sched)
+
+
+# ---------------------------------------------------------------------------
+# concurrency: interleaved explorations racing one scheduler
+# ---------------------------------------------------------------------------
+
+def test_interleaved_exploration_stress(engine_setup):
+    """>= 8 concurrent BranchContext explorations on one engine: all
+    resolve, no stranded reservations, pool drains to zero."""
+    eng, sched, drv = fresh_driver(engine_setup, num_pages=96)
+    exps = []
+    for i in range(9):
+        if i % 3 == 0:
+            exps.append(drv.explore([i + 1, i + 2], 8, best_of_n,
+                                    n=3, tokens=4))
+        elif i % 3 == 1:
+            exps.append(drv.explore([i + 1, i + 2], 9, beam_search,
+                                    width=2, depth=2, tokens_per_level=4))
+        else:
+            exps.append(drv.explore([i + 1, i + 2], 10, tree_search,
+                                    fan_out=2, max_nodes=4,
+                                    tokens_per_node=3))
+    drv.run()
+    assert all(e.done and e.error is None for e in exps)
+    assert all(e.result.generated for e in exps)
+    # the searches really interleaved: far fewer driver rounds than the
+    # serial sum of each exploration's own decode schedule
+    assert drv.steps < 40
+    assert_drained(sched)
+
+
+def test_backpressure_degrades_not_crashes(engine_setup):
+    """A pool too small for everyone's fan-out: forks see backpressure,
+    some policies degrade to unforked decoding, everything completes."""
+    eng, sched, drv = fresh_driver(engine_setup, num_pages=40)
+    exps = [drv.explore([i + 1, i + 2, i + 3], 12,
+                        best_of_n, n=3, tokens=4) for i in range(8)]
+    drv.run()
+    assert all(e.done and e.error is None for e in exps)
+    degraded = [e for e in exps if e.result.stats.get("degraded")]
+    committed = [e for e in exps if e.result.committed]
+    assert len(degraded) + len(committed) == 8
+    assert committed                       # pressure didn't kill everyone
+    assert_drained(sched)
+
+
+def test_root_decode_to_exact_budget(engine_setup):
+    """A policy that decodes the root to exactly its request budget: the
+    scheduler retires the request naturally mid-exploration, and the
+    context still reads the captured result."""
+    eng, sched, drv = fresh_driver(engine_setup)
+
+    def to_the_brim(ctx):
+        yield Decode([ctx], 6, greedy=True)   # == max_new_tokens
+        return ctx.tokens()
+
+    exp = drv.explore([3, 1, 4], 6, to_the_brim)
+    toks = exp.run()
+    assert len(toks) == 3 + 6
+    assert exp.final_tokens == toks
+    assert_drained(sched)
+
+
+def test_error_scoped_to_awaited_exploration(engine_setup):
+    """Awaiting one exploration must not raise another's error, and a
+    reported error is not re-raised by later run() calls."""
+    eng, sched, drv = fresh_driver(engine_setup)
+
+    def buggy(ctx):
+        raise ValueError("boom")
+        yield  # pragma: no cover
+
+    def fine(ctx):
+        kids = yield Fork(ctx, 2)
+        yield Decode(kids, 2)
+        kids[0].commit()
+        return "ok"
+
+    bad = drv.explore([1, 2, 3], 8, buggy)
+    good = drv.explore([4, 5, 6], 8, fine)
+    assert good.run() == "ok"          # not poisoned by bad's failure
+    with pytest.raises(ValueError, match="boom"):
+        bad.run()
+    drv.run()                          # stale errors surface only once
+    assert_drained(sched)
+
+
+def test_no_stray_root_token_before_policy(engine_setup):
+    """The admitted root is held in the admission transaction itself:
+    the policy sees exactly the prompt, never a scheduler-paced token."""
+    eng, sched, drv = fresh_driver(engine_setup)
+    seen = {}
+
+    def probe(ctx):
+        seen["fork_len"] = ctx.fork_len
+        seen["tokens"] = ctx.tokens()
+        return True
+        yield  # pragma: no cover - makes this a generator
+
+    drv.explore([7, 3, 9], 8, probe).run()
+    assert seen["fork_len"] == 3
+    assert seen["tokens"] == [7, 3, 9]
+
+
+def test_beam_survives_budget_exhausted_degraded_root(engine_setup):
+    """A degraded beam level that exhausts the request budget retires
+    the root; the next level's fork fails with BranchError, which must
+    degrade the policy — not crash the whole driver run."""
+    eng, sched, drv = fresh_driver(engine_setup, num_pages=6)
+    # worst case fills the pool: every fork is permanently denied
+    exp = drv.explore([1, 2, 3], 8, beam_search, width=2, depth=3,
+                      tokens_per_level=4)
+    res = exp.run()
+    assert any(lv.get("degraded") for lv in res.stats["levels"])
+    assert len(res.stats["levels"]) == 3    # all levels accounted for
+    assert len(res.generated) == 8          # capped at the budget
+    assert_drained(sched)
+
+
+def test_tick_wait_is_not_a_stall(engine_setup):
+    eng, sched, drv = fresh_driver(engine_setup)
+    from repro.explore_ctx import Tick
+
+    def patient(ctx):
+        yield Tick(4)
+        return "waited"
+
+    exp = drv.explore([1, 2, 3], 8, patient)
+    assert exp.run() == "waited"
+
+
+def test_missized_sampling_rows_mutate_nothing(engine_setup):
+    eng = fresh_engine(engine_setup)
+    a = eng.add_request([1, 2, 3])
+    b = eng.add_request([4, 5, 6])
+    with pytest.raises(ValueError, match="sampling rows"):
+        eng.decode([a, b], greedy=[True])   # wrong row length
+    # refused before any metadata moved: the invariant survives
+    assert eng.kv.length(a) == 2 and eng.kv.length(b) == 2
+    assert len(eng.tokens(a)) == 3 and len(eng.tokens(b)) == 3
+    eng.decode([a, b])                      # still decodes cleanly
+
+
+def test_driver_stall_is_detected(engine_setup):
+    """A policy decoding its own frozen origin can never make progress;
+    the driver must prove the stall and raise, not spin forever."""
+    eng, sched, drv = fresh_driver(engine_setup)
+
+    def bad_policy(ctx):
+        yield Fork(ctx, 2)
+        yield Decode([ctx], 4)             # ctx is FROZEN: never decodes
+
+    drv.explore([1, 2, 3], 8, bad_policy)
+    with pytest.raises(RuntimeError, match="stalled"):
+        drv.run()
+
+
+# ---------------------------------------------------------------------------
+# nesting: recursive invalidation across domains
+# ---------------------------------------------------------------------------
+
+def test_nested_context_abort_invalidates_grandchildren(engine_setup):
+    """Aborting a parent context kills grandchildren in the KV domain,
+    token domain and scheduler tracking — one kernel cascade."""
+    eng, sched, drv = fresh_driver(engine_setup)
+    holder = {}
+
+    def nested(ctx):
+        (child,) = yield Fork(ctx, 1)
+        grandkids = yield Fork(child, 2)
+        yield Decode(grandkids, 2)
+        holder["child"], holder["grandkids"] = child, grandkids
+        child.abort()                       # invalidates the whole subtree
+        return ctx.generated()
+
+    exp = drv.explore([4, 5, 6], 8, nested)
+    exp.run()
+    child, (g1, g2) = holder["child"], holder["grandkids"]
+    for c in (child, g1, g2):
+        assert not c.alive
+    assert_drained(sched)
+
+
+def test_nested_composite_abort_spans_store_domain(engine_setup):
+    """With composite contexts the same parent abort also invalidates
+    the grandchildren's *store* branches — cross-domain recursion."""
+    store = BranchStore({"plan": b"root"})
+    eng, sched, drv = fresh_driver(engine_setup, store=store)
+    holder = {}
+
+    def nested(ctx):
+        (child,) = yield Fork(ctx, 1)
+        grandkids = yield Fork(child, 2)
+        yield Decode(grandkids, 2)
+        for i, g in enumerate(grandkids):
+            g.state.write("plan", f"g{i}".encode())
+        child.abort()                       # invalidates the whole subtree
+        holder["kv_dead"] = [not c.alive for c in [child] + grandkids]
+        holder["state_status"] = [c.state.status
+                                  for c in [child] + grandkids]
+        return True
+
+    drv.explore([4, 5, 6], 8, nested).run()
+    assert holder["kv_dead"] == [True, True, True]  # KV domain dead
+    assert holder["state_status"][0] is BranchStatus.ABORTED
+    assert all(s in (BranchStatus.ABORTED, BranchStatus.STALE)
+               for s in holder["state_status"])     # store domain dead too
+    assert store.read(BranchStore.ROOT, "plan") == b"root"
+    # the exploration's whole store subtree was reaped on completion:
+    # a long-running driver's store stays bounded
+    assert len(store._tree) == 1                    # only the store root
+    assert_drained(sched)
+
+
+def test_composite_commit_promotes_both_domains(engine_setup):
+    store = BranchStore({"plan": b"root"})
+    eng, sched, drv = fresh_driver(engine_setup, store=store)
+
+    def pick_one(ctx):
+        kids = yield Fork(ctx, 3)
+        yield Decode(kids, 3)
+        for i, k in enumerate(kids):
+            k.state.write("plan", f"branch-{i}".encode())
+        kids[2].commit()
+        return ctx.state.read("plan")
+
+    res = drv.explore([1, 2, 3], 8, pick_one).run()
+    assert res == b"branch-2"
+    assert_drained(sched)
+
+
+def test_composite_fork_backpressure_does_not_churn_store(engine_setup):
+    """A denied composite fork must be refused by the cheap KV ledger
+    check BEFORE the store domain forks — retry rounds while parked
+    must not grow the store tree."""
+    store = BranchStore({"plan": b"root"})
+    eng, sched, drv = fresh_driver(engine_setup, store=store, num_pages=4)
+    rid = sched.submit([1, 2, 3], max_new_tokens=4, hold=True)
+    sched.admit()
+    ctx = drv._bind_root(rid, sched.seq_of(rid))
+    nodes_before = len(store._tree)
+    for _ in range(5):
+        with pytest.raises(AdmissionDenied):
+            ctx.fork(8)                     # can never fit 8 children
+    assert len(store._tree) == nodes_before  # no fork/unwind churn
+
+
+def test_decode_per_context_sampling_rows(engine_setup):
+    """One Decode wait mixes a greedy verifier lane with sampled drafts
+    (speculative decoding's shape) and a bad row length fails into the
+    policy, not the driver."""
+    eng, sched, drv = fresh_driver(engine_setup)
+    seen = {}
+
+    def mixed(ctx):
+        kids = yield Fork(ctx, 3)
+        yield Decode(kids, 3, greedy=[True, False, False],
+                     temperature=[1.0, 3.0, 3.0])
+        seen["gen"] = [k.generated() for k in kids]
+        with pytest.raises(ValueError, match="sampling rows"):
+            yield Decode(kids, 1, greedy=[True])
+        kids[0].commit()
+        return True
+
+    assert drv.explore([11, 12, 13], 8, mixed).run() is True
+    assert all(len(g) == 3 for g in seen["gen"])
+    assert_drained(sched)
+
+
+def test_admission_error_reaches_policy(engine_setup):
+    """A request that can never fit raises AdmissionDenied *inside* the
+    policy generator (not backpressure — a programming error)."""
+    eng, sched, drv = fresh_driver(engine_setup, num_pages=4)
+
+    def wants_too_much(ctx_unused):
+        with pytest.raises(AdmissionDenied):
+            yield Submit(list(range(100)), 100)
+        return "handled"
+
+    exp = drv.launch(wants_too_much(None))
+    drv.run()
+    assert exp.result == "handled"
+
+
+# ---------------------------------------------------------------------------
+# truncation (the speculative-decode primitive)
+# ---------------------------------------------------------------------------
+
+def test_truncate_then_commit_keeps_prefix(engine_setup):
+    eng = fresh_engine(engine_setup)
+    root = eng.add_request([1, 2, 3, 4, 5])
+    b1, b2 = eng.fork(root, 2)
+    for _ in range(6):
+        eng.decode([b1, b2])               # greedy: identical branches
+    assert lcp_len(eng.tokens(b1)[5:], eng.tokens(b2)[5:]) == 6
+    free_before = eng.kv.free_pages
+    eng.truncate(b1, 5 + 2)                # keep 2 "verified" tokens
+    kept = eng.tokens(b1)
+    assert kept == eng.tokens(b2)[:7]
+    assert eng.kv.length(b1) == 6          # tokens - 1 invariant holds
+    assert eng.kv.free_pages > free_before  # surplus tail page recycled
+    eng.commit(b1)
+    assert eng.tokens(root) == kept
+    # the truncated branch keeps decoding correctly after commit
+    eng.decode([root])
+    assert len(eng.tokens(root)) == 8
+    eng.release(root)
+    assert eng.kv.free_pages == eng.kv.num_pages
+
+
+def test_truncate_guards(engine_setup):
+    from repro.core.errors import FrozenOriginError
+
+    eng = fresh_engine(engine_setup)
+    root = eng.add_request([1, 2, 3, 4, 5, 6])
+    with pytest.raises(ValueError):
+        eng.truncate(root, 9)              # cannot grow
+    eng.fork(root, 1)
+    with pytest.raises(FrozenOriginError):
+        eng.truncate(root, 3)              # frozen origin: appends denied
+
+
+# ---------------------------------------------------------------------------
+# per-sequence sampling in one batch
+# ---------------------------------------------------------------------------
+
+def test_mixed_sampling_single_batch(engine_setup):
+    """Greedy and sampled sequences share one decode dispatch; the
+    greedy lane must match an all-greedy control."""
+    ctrl = fresh_engine(engine_setup)
+    c = ctrl.add_request([11, 12, 13])
+    want = [ctrl.decode([c])[0] for _ in range(2)]
+
+    eng = fresh_engine(engine_setup)
+    a = eng.add_request([11, 12, 13])
+    b = eng.add_request([11, 12, 13])
+    key = jax.random.PRNGKey(0)
+    for _ in range(2):
+        key, k = jax.random.split(key)
+        eng.decode([a, b], greedy=[True, False],
+                   temperature=[1.0, 3.0], key=k)
+    assert eng.tokens(a)[3:] == want
+
+
+def test_scheduler_per_seq_sampling_inherited_on_fork(engine_setup):
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng, SchedulerConfig(seed=5))
+    rid = sched.submit([1, 2, 3], max_new_tokens=6)
+    sched.admit()
+    seq = sched.seq_of(rid)
+    sched.set_sampling(seq, greedy=False, temperature=2.0)
+    kids = sched.fork(seq, 2)
+    assert all(sched._sampling[k] == (False, 2.0) for k in kids)
+    sched.step()                            # sampled decode, internal key
+    assert all(sched.produced(k) == 1 for k in kids)
+
+
+# ---------------------------------------------------------------------------
+# scheduler completion primitives
+# ---------------------------------------------------------------------------
+
+def test_finish_retires_early_and_frees(engine_setup):
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng)
+    rid = sched.submit([1, 2, 3], max_new_tokens=12)
+    sched.admit()
+    sched.step()
+    assert not sched.finished(rid)
+    sched.finish(rid)                       # long before the budget
+    assert sched.finished(rid)
+    assert len(sched.result(rid)) == 4
+    st = sched.stats()
+    assert st["pages_free"] == st["pages_total"]
+    assert st["pages_reserved"] == 0
+
+
+def test_finish_cancels_waiting_request(engine_setup):
+    eng = fresh_engine(engine_setup, num_pages=4)
+    sched = Scheduler(eng)
+    r1 = sched.submit([1, 2, 3, 4], max_new_tokens=6)
+    r2 = sched.submit([5, 6, 7, 8], max_new_tokens=6)   # FIFO-blocked
+    sched.admit()
+    sched.finish(r2)
+    assert sched.result(r2) == []
+    assert sched.wait(r1, max_steps=20)     # head request unaffected
+
+
+def test_hold_blocks_decode_and_retire(engine_setup):
+    eng = fresh_engine(engine_setup)
+    sched = Scheduler(eng)
+    rid = sched.submit([1, 2, 3], max_new_tokens=2)
+    sched.admit()
+    seq = sched.seq_of(rid)
+    sched.hold(seq)
+    for _ in range(3):
+        st = sched.step()
+        assert st["decoded"] == 0 and st["retired"] == 0
+    sched.unhold(seq)
+    assert len(sched.wait(rid, max_steps=10)) == 5  # prompt + budget
