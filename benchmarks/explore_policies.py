@@ -50,8 +50,9 @@ def _drive(engine, launches) -> Tuple[float, int, int, int]:
 
     Returns (seconds, branches_created, tokens, peak_pages_used).
     """
-    sched = Scheduler(engine, SchedulerConfig(max_batch=16, seed=7))
-    driver = ExplorationDriver(sched)
+    from repro.api import BranchSession
+
+    driver = ExplorationDriver(BranchSession(engine, max_batch=16, seed=7))
     exps = [launch(driver) for launch in launches]
     peak = 0
     t0 = time.perf_counter()

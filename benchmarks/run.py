@@ -7,6 +7,7 @@ so the perf trajectory is tracked across PRs.  Tables:
   T5 (commit ∝ Δ)        -> commit_abort
   T6 (throughput)         -> throughput
   serving-scale branching -> kvbranch_bench
+  vectorized fork fan-out -> fork_fanout
   serve throughput        -> serve_throughput
   in-program exploration  -> explore_bench
   exploration policies    -> explore_policies
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
         commit_abort,
         explore_bench,
         explore_policies,
+        fork_fanout,
         kvbranch_bench,
         serve_throughput,
         throughput,
@@ -57,6 +59,7 @@ def main(argv=None) -> None:
         ("commit_abort", commit_abort),
         ("throughput", throughput),
         ("kvbranch_bench", kvbranch_bench),
+        ("fork_fanout", fork_fanout),
         ("serve_throughput", serve_throughput),
         ("explore_bench", explore_bench),
         ("explore_policies", explore_policies),

@@ -1,12 +1,14 @@
 """Agentic exploration over generations — the paper's serving workload,
-now through the BranchContext subsystem.
+now through the one public ``repro.api`` surface.
 
 Two Tree-of-Thoughts searches (``beam_search``: fork N continuation
 branches per level, decode, score, commit the best) plus a nested
 ``tree_search`` run *concurrently* on one engine: every request enters
-through ``Scheduler.submit`` admission (worst-case page reservations, so
-no mid-decode -ENOSPC), and the exploration driver multiplexes all
-policies' decode work into the same continuous batch.
+through a :class:`~repro.api.BranchSession` (worst-case page
+reservations, so no mid-decode -ENOSPC; every fork a vectorized
+``branch()`` with one fused CoW dispatch), and the exploration driver
+multiplexes all policies' decode work into the same continuous batch
+via the session's epoll-like ``Waiter``.
 
 Run:  PYTHONPATH=src python examples/agentic_serve.py
 """
@@ -15,10 +17,10 @@ import dataclasses
 
 import jax
 
+from repro.api import BranchSession
 from repro.configs import get_config
 from repro.explore_ctx import ExplorationDriver, beam_search, tree_search
 from repro.models.model import Model
-from repro.runtime.scheduler import Scheduler, SchedulerConfig
 from repro.runtime.serve_loop import ServeEngine
 
 
@@ -28,8 +30,8 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=512, page_size=8,
                          max_pages_per_seq=32)
-    sched = Scheduler(engine, SchedulerConfig(max_batch=8, seed=42))
-    driver = ExplorationDriver(sched)
+    session = BranchSession(engine, max_batch=8, seed=42)
+    driver = ExplorationDriver(session)
 
     prompt = [7, 3, 9, 21, 14, 2]
     print(f"prompt: {prompt}")
@@ -65,7 +67,7 @@ def main():
           f", score {tree_score}")
     print(f"final sequence: {beam.result.tokens}")
     print(f"concurrent sequence: {beam2.result.tokens}")
-    print(f"pool after (drained): {engine.stats()}")
+    print(f"pool after (drained): {session.tree()['pool']}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """Quickstart: the paper's Listing 2 (fork / explore / commit) in branchx.
 
-Three state domains, one abstraction:
+Four faces of one abstraction:
   1. host pytree state (BranchStore)        — ≈ BranchFS
   2. on-disk workspace (BranchFS)           — ≈ BranchFS daemon
   3. in-program stacked state (explore())   — ≈ branch() + BR_MEMORY
+  4. the branch() syscall surface itself    — repro.api.BranchSession
+     (vectorized fork, flags word, errno discipline, epoll-style waits)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -75,8 +77,41 @@ def demo_device():
           f"{float(res.state['loss']):.4f}")
 
 
+def demo_api():
+    print("== 4. branch() over a serving engine: the repro.api surface ==")
+    import dataclasses
+
+    from repro.api import EV_FINISHED, BranchSession, Waiter
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.runtime.serve_loop import ServeEngine
+
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    engine = ServeEngine(model, model.init(jax.random.PRNGKey(0)),
+                         num_pages=64, page_size=4, max_pages_per_seq=16)
+    session = BranchSession(engine, seed=0)
+
+    root = session.open([7, 3, 9], max_new_tokens=10)
+    kids = session.branch(root, n=3)   # one ledger txn, one fused CoW copy
+    # epoll-style: wait until every sibling generated 4 tokens
+    Waiter(session).add(kids[0], produced=4).add(kids[1], produced=4) \
+                   .add(kids[2], produced=4).wait(require_all=True)
+    best = max(kids, key=lambda h: sum(session.tokens(h)[3:]))
+    session.commit(best)               # siblings -ESTALE, pages recycled
+    losers = [h for h in kids if h != best]
+    print(f"   poll ready-set after commit: "
+          f"{ {h: session.stat(h)['events'] for h in losers} }")
+    session.wait([root], events=EV_FINISHED)
+    print(f"   committed continuation: {session.result(root)}")
+    session.finish(root)
+    pool = session.tree()["pool"]
+    print(f"   pool drained: {pool['pages_free']}/{pool['pages_total']}")
+
+
 if __name__ == "__main__":
     demo_store()
     demo_fs()
     demo_device()
+    demo_api()
     print("quickstart complete")

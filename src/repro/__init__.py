@@ -3,15 +3,56 @@
 Implements *Fork, Explore, Commit: OS Primitives for Agentic
 Exploration* (CS.OS 2026) as a production training/serving framework:
 
-* :mod:`repro.core`      — branch contexts over pytrees, paged KV, and
-  in-program exploration with first-commit-wins.
+* :mod:`repro.api`       — **the public surface**: ``BranchSession``
+  (``branch()`` with a flags word, fd-style handles, errno discipline),
+  epoll-like ``Waiter`` eventing, procfs-style introspection.
+* :mod:`repro.core`      — the branch-lifecycle kernel and its state
+  domains (pytree store, paged KV), in-program exploration with
+  first-commit-wins, and the shared ``Errno`` vocabulary.
 * :mod:`repro.fs`        — durable BranchFS (delta checkpoints).
 * :mod:`repro.models`    — all 10 assigned architectures.
 * :mod:`repro.kernels`   — Pallas TPU kernels (paged attention, flash
   attention, SSD scan) with jnp oracles.
 * :mod:`repro.runtime`   — fault-tolerant training, branchable serving.
+* :mod:`repro.explore_ctx` — exploration policies (best-of-N, beam,
+  tree search, speculative decode) as sugar over ``repro.api``.
 * :mod:`repro.launch`    — production meshes, multi-pod dry-run,
   roofline analysis.
+
+Submodules are imported lazily (PEP 562) so ``import repro`` stays
+cheap; ``__all__`` below is exactly the documented public surface, and
+each name resolves on first attribute access.
 """
 
-__version__ = "1.0.0"
+from importlib import import_module
+from typing import Any
+
+__version__ = "1.1.0"
+
+#: the documented public namespace — everything here imports cleanly
+__all__ = [
+    "__version__",
+    "api",
+    "checkpoint",
+    "configs",
+    "core",
+    "data",
+    "distributed",
+    "explore_ctx",
+    "fs",
+    "kernels",
+    "launch",
+    "models",
+    "optim",
+    "runtime",
+]
+
+
+def __getattr__(name: str) -> Any:
+    if name in __all__:
+        return import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__() -> list:
+    return sorted(__all__)

@@ -1,5 +1,9 @@
 """Branch contexts — the paper's primary contribution, realized for JAX.
 
+Application code should enter through :mod:`repro.api` (the one
+``branch()`` surface: handles, flags, errno, events); this package is
+the kernel + domain layer underneath it.
+
 Public API:
 
 * :class:`BranchTree` / :class:`BranchDomain` — the branch-lifecycle

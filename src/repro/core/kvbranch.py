@@ -38,7 +38,7 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.errors import FrozenOriginError
+from repro.core.errors import FrozenOriginError, PoolExhausted
 from repro.core.lifecycle import LIVE, BranchStatus, BranchTree
 
 # Historical alias: sequence status *is* branch status now that every
@@ -99,7 +99,7 @@ class KVBranchManager:
 
     def _alloc_page(self) -> int:
         if not self._free:
-            raise MemoryError("KV page pool exhausted (-ENOSPC analogue)")
+            raise PoolExhausted("KV page pool exhausted (-ENOSPC)")
         page = self._free.pop()
         self._refcount[page] = 1
         return page
@@ -190,6 +190,49 @@ class KVBranchManager:
         a frozen origin until all children resolve.
         """
         return self._tree.fork(seq_id, n)
+
+    def fork_batch(self, seq_id: int,
+                   n: int = 1) -> Tuple[List[int], List[CowOp]]:
+        """Vectorized fork: ``n`` siblings plus their fused tail CoW plan.
+
+        The TClone-style hot path for agent fan-out: all ``n`` children
+        are created in one kernel transaction (one lock, one exclusive
+        commit group), and the shared-tail copy-on-write every child
+        would otherwise fault individually at its first append is
+        resolved *eagerly* — each child's table tail is swapped to a
+        freshly allocated page here, and the page copies are returned as
+        one :class:`CowOp` list the caller services in a **single**
+        fused ``_copy_pages`` device dispatch.  ``n`` sequential
+        ``fork(seq, 1)`` calls pay ``n`` dispatches for the same state.
+
+        Only the partially-filled tail page is pre-faulted (a full tail
+        means the next append opens a fresh page — no CoW to hoist).  If
+        the pool empties mid-plan the remaining children simply keep the
+        shared tail and fault lazily later; eager CoW is an optimization,
+        never a correctness requirement.  Callers going through
+        :meth:`Scheduler.fork <repro.runtime.scheduler.Scheduler.fork>`
+        admission cannot hit that path — the reservation ledger covers
+        one CoW'd tail page per child.
+        """
+        with self._tree.lock:
+            children = self._tree.fork(seq_id, n)
+            ops: List[CowOp] = []
+            table = self._tables[seq_id]
+            if table and self._lengths[seq_id] % self.page_size != 0:
+                shared = table[-1]
+                for c in children:
+                    child_table = self._tables[c]
+                    if self._refcount[shared] <= 1 or \
+                            not child_table or child_table[-1] != shared:
+                        continue
+                    try:
+                        fresh = self._alloc_page()
+                    except PoolExhausted:
+                        break   # remaining children CoW lazily on append
+                    self._decref([shared])
+                    child_table[-1] = fresh
+                    ops.append(CowOp(src_page=shared, dst_page=fresh))
+            return children, ops
 
     def prepare_append(self, seq_id: int, n_tokens: int = 1) -> List[AppendSlot]:
         """Reserve slots for the next ``n_tokens`` tokens of ``seq_id``.

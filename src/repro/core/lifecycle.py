@@ -410,6 +410,27 @@ class BranchTree:
     # ------------------------------------------------------------------
     # introspection
     # ------------------------------------------------------------------
+    def snapshot(self) -> List[dict]:
+        """Procfs-style view of the whole forest (for ``repro.api``'s
+        ``tree()``): one nested dict per root, each node carrying its
+        id, lazily-checked status, exclusive group and epoch.  Read-only
+        and taken under the lock, so it is a consistent cut of the
+        lifecycle state.
+        """
+        with self.lock:
+            def view(bid: int) -> dict:
+                node = self._nodes[bid]
+                return {
+                    "id": bid,
+                    "status": self.status(bid).value,
+                    "group": node.group,
+                    "epoch": node.epoch,
+                    "children": [view(c) for c in node.children
+                                 if c in self._nodes],
+                }
+            return [view(bid) for bid, node in self._nodes.items()
+                    if node.parent is None or node.parent not in self._nodes]
+
     def live_count(self) -> int:
         with self.lock:
             return sum(1 for n in self._nodes.values() if n.status in LIVE)

@@ -237,7 +237,19 @@ class BranchRuntime:
 
     # ------------------------------------------------------------------
     def __call__(self, op: int, **kwargs: Any) -> Any:
-        """Multiplexed entry point in the style of ``bpf(2)`` / Listing 1."""
+        """Multiplexed entry point in the style of ``bpf(2)`` / Listing 1.
+
+        .. deprecated:: superseded by :class:`repro.api.BranchSession` —
+           the one public ``branch()`` surface with a real flags word,
+           handle table, errno discipline and poll/wait eventing.  The
+           opcode dispatcher remains as a thin shim for existing callers.
+        """
+        import warnings
+
+        warnings.warn(
+            "BranchRuntime(op, ...) opcode dispatch is deprecated; use "
+            "repro.api.BranchSession.branch()/commit()/abort() instead",
+            DeprecationWarning, stacklevel=2)
         if op == BR_CREATE:
             return self.create(**kwargs)
         if op == BR_COMMIT:

@@ -2,34 +2,28 @@
 
 The paper ships two artifacts: the branch *primitive* (kernel, domains,
 scheduler — PR 1) and **BranchContext**, the integration library that
-turns the primitive into ready-to-use exploration patterns.  This module
-is the library's spine: a context-manager handle over one scheduler-
-tracked sequence that exposes the structured fork/explore/commit-or-
-abort lifecycle to policies.
+turns the primitive into ready-to-use exploration patterns.  Since the
+``repro.api`` redesign this class is pure **sugar over session
+handles**: every lifecycle verb delegates to one
+:class:`~repro.api.BranchSession` method, so a context and a raw handle
+are always interchangeable (``ctx.hd`` is the handle; wrap any handle
+in a context to get the object-style API back).
 
-A context differs from raw engine/scheduler calls in three ways:
+What the sugar adds over raw ``branch()`` calls:
 
-* **Admission-checked by construction** — ``fork`` goes through
-  ``Scheduler.fork`` (or, for composite contexts, a
-  ``BranchRuntime`` whose KV fork is the scheduler's), so every branch
-  a policy creates is backed by a worst-case page reservation and
-  ``AdmissionDenied`` is backpressure, never mid-decode ``-ENOSPC``.
-* **Nestable** — a child context forks grandchildren; aborting an
-  ancestor invalidates the whole subtree across every domain
-  (the kernel's recursive sibling invalidation, reached through one
-  object).  ``commit_chain`` promotes a deep winner level by level to
-  the exploration root.
-* **Composite** — a context may carry a :class:`~repro.core.branch.
-  BranchContext` (store) view alongside its KV sequence; forks and
-  commits then resolve both domains atomically through
-  :class:`~repro.core.runtime_api.BranchRuntime`, so a policy can
-  branch filesystem-like agent state together with generation state.
+* **Tree bookkeeping** — parent/children links, depth, per-node scores,
+  ``commit_chain`` promoting a deep winner level by level.
+* **Exploration defaults** — ``fork`` passes ``BR_HOLD`` (the driver
+  paces decoding), ``BR_NESTED`` (policies nest freely) and
+  ``BR_NONBLOCK`` (the driver owns the retry loop) so policies never
+  spell flag words.
+* **Context-manager semantics** — leaving a ``with`` block without
+  commit aborts; no side effects escape an unresolved branch.
 
 Contexts do not pace their own decoding: the
 :class:`~repro.explore_ctx.driver.ExplorationDriver` multiplexes decode
 work from many live contexts into the scheduler's continuous-batching
-loop.  Within a ``with`` block, leaving without commit aborts (no side
-effects escape an unresolved branch).
+loop through the session's :class:`~repro.api.events.Waiter`.
 """
 
 from __future__ import annotations
@@ -37,11 +31,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.api.flags import BR_HOLD, BR_NESTED, BR_NONBLOCK
+from repro.api.session import BranchSession
 from repro.core.branch import BranchContext as StateContext
-from repro.core.errors import BranchStateError
+from repro.core.errors import BadHandleError, BranchStateError
 from repro.core.lifecycle import BranchStatus
-from repro.core.runtime_api import BR_KV, BR_STATE, BranchHandle, BranchRuntime
-from repro.runtime.scheduler import AdmissionDenied
 
 
 @dataclass
@@ -68,94 +62,75 @@ def policy_result(root: "BranchContext", *, score: Optional[float] = None,
 class BranchContext:
     """A scheduled branch following fork/explore/commit-or-abort."""
 
-    def __init__(self, sched: Any, seq: int, *,
-                 parent: Optional["BranchContext"] = None,
-                 req_id: Optional[int] = None,
-                 runtime: Optional[BranchRuntime] = None,
-                 state: Optional[StateContext] = None,
-                 handle: Optional[BranchHandle] = None):
-        self.sched = sched
-        self.engine = sched.engine
-        self.seq = seq
+    def __init__(self, session: BranchSession, hd: int, *,
+                 parent: Optional["BranchContext"] = None):
+        self.session = session
+        self.hd = hd
         self.parent = parent
-        self.req_id = req_id if req_id is not None else (
-            parent.req_id if parent is not None else None)
-        self.runtime = runtime if runtime is not None else (
-            parent.runtime if parent is not None else None)
-        self.state = state
-        self.handle = handle
+        self.seq = session.seq_of(hd)
+        self.req_id = session.req_id_of(hd)
         self.children: List["BranchContext"] = []
         self.depth = 0 if parent is None else parent.depth + 1
         self.score: Optional[float] = None
         self._resolved = False
         # token count at creation: generated() is everything after this
-        self.fork_len = len(self.engine.tokens(seq))
+        self.fork_len = len(self.tokens())
 
     # -- liveness -------------------------------------------------------
     @property
     def alive(self) -> bool:
-        return self.seq in self.engine.kv.tree and \
-            self.engine.kv.is_live(self.seq)
+        try:
+            return self.session.alive(self.hd)
+        except BadHandleError:
+            return False             # handle closed: the branch is gone
 
     @property
     def status(self) -> Optional[BranchStatus]:
-        if self.seq not in self.engine.kv.tree:
-            return None          # reaped
-        return self.engine.kv.status(self.seq)
+        try:
+            return self.session.status(self.hd)   # None once reaped
+        except BadHandleError:
+            return None
 
     @property
     def resolved(self) -> bool:
         return self._resolved
 
+    @property
+    def state(self) -> Optional[StateContext]:
+        """The composite store-domain context (None in KV-only mode)."""
+        try:
+            return self.session.state_of(self.hd)
+        except BadHandleError:
+            return None
+
     # -- content --------------------------------------------------------
     def tokens(self) -> List[int]:
         """This branch's full token list (prompt + committed + own)."""
-        if self.seq in self.engine.token_domain:
-            return self.engine.tokens(self.seq)
-        if self._resolved and self.parent is not None:
-            return self.parent.tokens()   # committed: content lives there
-        if self.parent is None and self.req_id is not None:
-            # the root hit its decode budget and retired naturally: the
-            # scheduler captured the result before releasing the seq
-            res = self.sched.peek_result(self.req_id)
-            if res is not None:
-                return res
-        raise BranchStateError(
-            f"branch context seq={self.seq} has no token tail "
-            "(invalidated and reaped)")
+        try:
+            return self.session.tokens(self.hd)
+        except BadHandleError:
+            raise BranchStateError(
+                f"branch context hd={self.hd:#x} was closed "
+                "(its request finished)") from None
 
     def generated(self) -> List[int]:
         """Tokens this context added since it was forked."""
         return self.tokens()[self.fork_len:]
 
     # -- lifecycle ------------------------------------------------------
-    def fork(self, n: int = 1) -> List["BranchContext"]:
+    def fork(self, n: int = 1, flags: int = 0) -> List["BranchContext"]:
         """Fork ``n`` admission-checked children (one exclusive group).
 
-        Composite contexts fork the store domain in the same atomic
-        create: an ``AdmissionDenied`` from the KV side unwinds the
-        store forks, so no domain is half-created.  Children are parked
-        (held) — the driver decides when they decode.
+        One vectorized ``branch()`` call: all ``n`` siblings admitted in
+        one ledger transaction, tail CoW fused into one dispatch, every
+        domain forked atomically.  Children are parked (``BR_HOLD``) —
+        the driver decides when they decode — and the call never blocks
+        (``BR_NONBLOCK``): page pressure raises ``AdmissionDenied`` for
+        the driver's backpressure loop to absorb.
         """
-        if self.runtime is not None and self.state is not None:
-            # check the cheap reservation ledger BEFORE forking the store
-            # domain: a backpressure retry must not churn store nodes
-            if not self.sched.can_fork(self.seq, n):
-                raise AdmissionDenied(
-                    f"fork({self.seq}, n={n}) exceeds the page budget "
-                    "(-EAGAIN)")
-            handles = self.runtime.create(
-                self.state, n, flags=BR_STATE | BR_KV, kv_seqs=[self.seq])
-            kids = [
-                BranchContext(self.sched, h.kv_seqs[self.seq], parent=self,
-                              state=h.state, handle=h)
-                for h in handles
-            ]
-        else:
-            kids = [BranchContext(self.sched, s, parent=self)
-                    for s in self.sched.fork(self.seq, n)]
-        for k in kids:
-            self.sched.hold(k.seq)
+        hds = self.session.branch(
+            self.hd, flags | BR_HOLD | BR_NESTED | BR_NONBLOCK, n)
+        kids = [BranchContext(self.session, hd, parent=self) for hd in hds]
         self.children.extend(kids)
         return kids
 
@@ -163,10 +138,7 @@ class BranchContext:
         """First-commit-wins into the parent; siblings invalidated."""
         if self._resolved:
             raise BranchStateError("branch context already resolved")
-        if self.handle is not None:
-            self.runtime.commit(self.handle)
-        else:
-            self.engine.commit(self.seq)
+        self.session.commit(self.hd)
         self._resolved = True
         return self.parent
 
@@ -189,11 +161,10 @@ class BranchContext:
         """Discard this branch (and, recursively, its live subtree)."""
         if self._resolved:
             return
-        if self.handle is not None:
-            self.runtime.abort(self.handle)
-        elif self.seq in self.engine.kv.tree and \
-                self.engine.kv.is_live(self.seq):
-            self.engine.abort(self.seq)
+        try:
+            self.session.abort(self.hd)
+        except BadHandleError:
+            pass                     # closed: nothing left to discard
         self._resolved = True
 
     def prune_children(self) -> int:
@@ -209,9 +180,10 @@ class BranchContext:
         """Keep only the first ``n_generated`` tokens generated here.
 
         The speculative-decode primitive: a draft keeps its verified
-        prefix and commits that.
+        prefix and commits that.  Requires the context to have been
+        forked ``BR_SPECULATIVE`` (``-EPERM`` otherwise).
         """
-        self.engine.truncate(self.seq, self.fork_len + n_generated)
+        self.session.truncate(self.hd, n_generated)
 
     # -- context manager ------------------------------------------------
     def __enter__(self) -> "BranchContext":
@@ -224,7 +196,8 @@ class BranchContext:
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         st = self.status
-        return (f"BranchContext(seq={self.seq}, depth={self.depth}, "
+        return (f"BranchContext(hd={self.hd:#x}, seq={self.seq}, "
+                f"depth={self.depth}, "
                 f"status={st.value if st else 'reaped'})")
 
 

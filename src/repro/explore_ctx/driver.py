@@ -2,14 +2,18 @@
 
 The paper's BranchContext library is only useful at serving scale if
 hundreds of independent explorations can share one engine without
-hand-rolled coordination.  This driver is that multiplexer:
+hand-rolled coordination.  This driver is that multiplexer, and since
+the ``repro.api`` redesign it runs **entirely through the public
+surface**: every fork is a ``session.branch()`` call, every wait is a
+:class:`~repro.api.events.Waiter` registration, every retirement is
+``session.finish()`` — no raw scheduler verbs.
 
 * **Policies are generators.**  A policy yields *work items* —
   :class:`Submit`, :class:`Fork`, :class:`Decode`, :class:`Tick` — and
   performs commits/aborts synchronously on its contexts.  ``yield
   from`` composes policies into nested searches.
 * **One continuous batch.**  Each driver step resumes every policy
-  whose wait is satisfied, then runs exactly one ``Scheduler.step`` —
+  whose wait is satisfied, then runs exactly one ``session.step`` —
   so decode work from every live exploration lands in the same
   continuous batch (per-sequence sampling settings let greedy
   verification and high-temperature exploration share a dispatch).
@@ -21,9 +25,11 @@ hand-rolled coordination.  This driver is that multiplexer:
   throws ``AdmissionDenied`` into the blocked policies, which may then
   shrink their fan-out or commit what they have.
 * **Nothing leaks.**  When a policy returns (or raises), its request is
-  force-retired through :meth:`Scheduler.finish`: the root subtree is
-  released across every domain and all reservations return to the
-  pool.  N explorations entering always means a drained pool leaving.
+  force-retired through ``session.finish``: the root subtree is
+  released across every domain, all reservations return to the pool,
+  and every handle rooted at the request is closed (recycling its
+  table slot).  N explorations entering always means a drained pool
+  leaving.
 """
 
 from __future__ import annotations
@@ -31,12 +37,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 
-from repro.core.branch import root_context
-from repro.core.errors import BranchError, BranchStateError
-from repro.core.runtime_api import BranchRuntime
+from repro.api.events import EV_ADMITTED, Waiter
+from repro.api.flags import BR_HOLD
+from repro.api.session import BranchSession
+from repro.core.errors import AdmissionDenied, BranchError, Errno
 from repro.core.store import BranchStore
-from repro.explore_ctx.context import BranchContext, StateContext
-from repro.runtime.scheduler import AdmissionDenied, Scheduler
+from repro.explore_ctx.context import BranchContext, StateContext  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -56,10 +62,13 @@ class Fork:
     """Fork ``n`` children of ``ctx``; resumes with the child contexts.
 
     Retried with backpressure while the page budget cannot absorb it.
+    ``flags`` ORs extra ``repro.api`` flags into the fork —
+    ``BR_SPECULATIVE`` declares the children truncatable drafts.
     """
 
     ctx: BranchContext
     n: int
+    flags: int = 0
 
 
 @dataclass
@@ -89,19 +98,18 @@ class Tick:
 
 # ---------------------------------------------------------------------------
 # waits (internal): when may a parked exploration resume?
+# All readiness goes through the session's event surface — the driver
+# never inspects scheduler internals.
 # ---------------------------------------------------------------------------
 
 class _WaitAdmitted:
-    def __init__(self, req_id: int):
-        self.req_id = req_id
+    def __init__(self, hd: int):
+        self.hd = hd
 
     def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
-        try:
-            seq = drv.sched.seq_of(self.req_id)
-        except BranchError:
+        if not drv.session.events(self.hd) & EV_ADMITTED:
             return False, None
-        # the seq was held in the admission transaction (submit(hold=True))
-        return True, drv._bind_root(self.req_id, seq)
+        return True, BranchContext(drv.session, self.hd)
 
 
 class _WaitFork:
@@ -111,7 +119,7 @@ class _WaitFork:
 
     def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
         try:
-            kids = self.item.ctx.fork(self.item.n)
+            kids = self.item.ctx.fork(self.item.n, self.item.flags)
         except AdmissionDenied:
             self.attempts += 1
             return False, None
@@ -119,30 +127,16 @@ class _WaitFork:
 
 
 class _WaitTokens:
-    def __init__(self, item: Decode, targets: Dict[int, int]):
-        self.item = item
-        self.targets = targets   # seq -> produced() target
-
-    def _satisfied(self, drv: "ExplorationDriver", seq: int,
-                   target: int) -> bool:
-        sched = drv.sched
-        if not sched.is_tracked(seq):
-            return True          # resolved / reaped / evicted
-        if not sched.engine.kv.is_live(seq):
-            return True
-        req = sched.request_of(seq)
-        if req is None:
-            return True
-        produced = sched.produced(seq)
-        return produced >= target or produced >= req.max_new_tokens
+    def __init__(self, waiter: Waiter, ctxs: Sequence[BranchContext]):
+        self.waiter = waiter
+        self.ctxs = ctxs
 
     def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
-        if not all(self._satisfied(drv, s, t)
-                   for s, t in self.targets.items()):
+        ready = self.waiter.poll()
+        if len(ready) < len(self.waiter.handles()):
             return False, None
-        for seq in self.targets:
-            if drv.sched.is_tracked(seq):
-                drv.sched.hold(seq)   # park again: policy regains control
+        for ctx in self.ctxs:
+            drv.session.pause(ctx.hd)   # park again: policy regains control
         return True, None
 
 
@@ -166,6 +160,7 @@ class Exploration:
         self.driver = driver
         self.gen = gen
         self.name = name
+        self.hd: Optional[int] = None          # session root handle
         self.req_id: Optional[int] = None
         self.root: Optional[BranchContext] = None
         self.wait: Optional[Any] = None
@@ -190,18 +185,22 @@ class Exploration:
 # ---------------------------------------------------------------------------
 
 class ExplorationDriver:
-    """Multiplexes generator policies over one scheduler."""
+    """Multiplexes generator policies over one session."""
 
-    def __init__(self, sched: Scheduler, *,
+    def __init__(self, session: Any, *,
                  store: Optional[BranchStore] = None):
-        self.sched = sched
-        self.store = store
-        # composite contexts: the runtime's KV fork is the scheduler's,
-        # so store+KV creates go through page-budget admission together
-        self.runtime = (BranchRuntime.scheduled(store, sched)
-                        if store is not None else None)
-        self._state_root: Optional[StateContext] = (
-            root_context(store) if store is not None else None)
+        if isinstance(session, BranchSession):
+            if store is not None and session.store is not store:
+                raise BranchError(
+                    "pass the store to BranchSession, not the driver",
+                    errno=Errno.EINVAL)
+            self.session = session
+        else:
+            # migration path: wrap a bare Scheduler (or engine) in a
+            # session; BranchSession validates the type
+            self.session = BranchSession(session, store=store)
+        self.sched = self.session.sched
+        self.store = self.session.store
         self._live: List[Exploration] = []
         self.explorations: List[Exploration] = []
         self.steps = 0
@@ -226,14 +225,21 @@ class ExplorationDriver:
         return self.launch(wrapper(), name=name or getattr(
             policy, "__name__", "policy"))
 
-    def _bind_root(self, req_id: int, seq: int) -> BranchContext:
-        state = None
-        if self._state_root is not None:
-            # each exploration explores inside its own store subtree, so
-            # concurrent explorations never race each other's epoch CAS
-            (state,) = self._state_root.fork(1)
-        return BranchContext(self.sched, seq, req_id=req_id,
-                             runtime=self.runtime, state=state)
+    def _bind_root(self, req_id: int,
+                   seq: Optional[int] = None) -> BranchContext:
+        """Wrap an externally submitted request in a root context
+        (migration aid; new code opens through the session).  ``seq``
+        is accepted for backward compatibility and must be the
+        request's own root sequence — binding always resolves through
+        the request id.
+        """
+        hd = self.session.adopt(req_id)
+        if seq is not None and self.session.seq_of(hd) != seq:
+            raise BranchError(
+                f"request {req_id} is rooted at seq "
+                f"{self.session.seq_of(hd)}, not {seq}",
+                errno=Errno.EINVAL)
+        return BranchContext(self.session, hd)
 
     # -- stepping -------------------------------------------------------
     def _advance(self, exp: Exploration, value: Any = None,
@@ -258,23 +264,24 @@ class ExplorationDriver:
 
             if isinstance(item, Submit):
                 try:
-                    exp.req_id = self.sched.submit(
-                        list(item.prompt), item.max_new_tokens, hold=True)
+                    exp.hd = self.session.open(
+                        list(item.prompt), item.max_new_tokens,
+                        flags=BR_HOLD)
                 except AdmissionDenied as err:
                     # can NEVER fit: not backpressure — the policy decides
                     value, error = None, err
                     continue
-                self.sched.admit()   # admit eagerly if pages allow
-                exp.wait = _WaitAdmitted(exp.req_id)
-                ok, value = exp.wait.poll(self)   # may admit immediately
+                exp.req_id = self.session.req_id_of(exp.hd)
+                wait = _WaitAdmitted(exp.hd)
+                ok, value = wait.poll(self)   # may be admitted already
                 if ok:
                     exp.root = value
-                    exp.wait = None
                     continue
+                exp.wait = wait
                 return
             elif isinstance(item, Fork):
                 try:
-                    value = item.ctx.fork(item.n)
+                    value = item.ctx.fork(item.n, item.flags)
                     continue
                 except AdmissionDenied:
                     exp.wait = _WaitFork(item)    # backpressure: retry
@@ -295,18 +302,19 @@ class ExplorationDriver:
                     value, error = None, ValueError(
                         "Decode sampling rows must match its contexts")
                     continue
-                targets: Dict[int, int] = {}
+                waiter = Waiter(self.session)
+                active: List[BranchContext] = []
                 for ctx, g, t in zip(item.ctxs, g_row, t_row):
-                    seq = ctx.seq
-                    if not self.sched.is_tracked(seq):
+                    if not self.session.tracked(ctx.hd):
                         continue   # already resolved: nothing to decode
-                    self.sched.set_sampling(seq, greedy=g, temperature=t)
-                    self.sched.unhold(seq)
-                    targets[seq] = self.sched.produced(seq) + item.tokens
-                if not targets:
+                    target = self.session.produced(ctx.hd) + item.tokens
+                    self.session.resume(ctx.hd, greedy=g, temperature=t)
+                    waiter.add(ctx.hd, events=0, produced=target)
+                    active.append(ctx)
+                if not active:
                     value = None
                     continue
-                exp.wait = _WaitTokens(item, targets)
+                exp.wait = _WaitTokens(waiter, active)
                 return
             elif isinstance(item, Tick):
                 exp.wait = _WaitSteps(self.steps + item.steps)
@@ -316,43 +324,27 @@ class ExplorationDriver:
                     f"policy yielded {item!r}; expected Submit/Fork/"
                     "Decode/Tick")
 
-    def _cleanup(self, exp: Exploration) -> None:
-        if exp.req_id is not None:
-            if not self.sched.finished(exp.req_id):
-                self.sched.finish(exp.req_id)
-            if self.sched.peek_result(exp.req_id) is not None:
-                exp.final_tokens = self.sched.result(exp.req_id)
-        # composite mode: the per-exploration store subtree is done —
-        # abort + reap it so a long-running driver's store stays bounded
-        # (a policy that wants state to outlive its exploration must
-        # surface it through its return value before finishing)
-        if exp.root is not None and exp.root.state is not None \
-                and self.store is not None:
-            state = exp.root.state
-            try:
-                if state.is_active:
-                    state.abort()
-            except BranchStateError:
-                pass
-            self.store.reap(state.branch_id)
-
     def _finalize(self, exp: Exploration, result: Any) -> None:
         exp.result = result
         exp.done = True
         exp.wait = None
         self._live.remove(exp)
-        self._cleanup(exp)
+        if exp.hd is not None:
+            # finish releases the subtree across every domain, reaps the
+            # composite store branch, and closes all of its handles
+            exp.final_tokens = self.session.finish(exp.hd)
 
     def _fail(self, exp: Exploration, err: BaseException) -> None:
         exp.error = err
         exp.done = True
         exp.wait = None
         self._live.remove(exp)
-        self._cleanup(exp)   # release the subtree: no stranded reservations
+        if exp.hd is not None:
+            exp.final_tokens = self.session.finish(exp.hd)
 
     def step(self, **decode_kw: Any) -> Dict[str, Any]:
-        """One round: resume ready explorations, then one scheduler step."""
-        self.sched.admit()   # admit first so _WaitAdmitted binds + holds
+        """One round: resume ready explorations, then one session step."""
+        self.session.admit()   # admit first so _WaitAdmitted binds + holds
         resumed = 0
         for exp in list(self._live):
             if exp.done:
@@ -377,7 +369,7 @@ class ExplorationDriver:
                         exp.root = value
                     self._advance(exp, value)
                     resumed += 1
-        st = self.sched.step(**decode_kw)
+        st = self.session.step(**decode_kw)
         st["resumed"] = resumed
         st["live_explorations"] = len(self._live)
         self.steps += 1

@@ -25,6 +25,7 @@ from typing import Any, Dict, Generator, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.flags import BR_SPECULATIVE
 from repro.core.errors import BranchError
 from repro.core.explore import explore
 from repro.explore_ctx.context import BranchContext, policy_result
@@ -35,9 +36,14 @@ from repro.explore_ctx.scoring import lcp_len
 def speculative_decode(ctx: BranchContext, *, n_drafts: int = 3,
                        draft_tokens: int = 8,
                        temperature: float = 1.5) -> Generator:
-    """Draft/verify/commit-the-longest-verified-prefix, as a policy."""
+    """Draft/verify/commit-the-longest-verified-prefix, as a policy.
+
+    The fork declares its children ``BR_SPECULATIVE`` — the flag that
+    licenses ``truncate`` (rewriting a draft down to its verified
+    prefix); an undeclared branch attempting the same gets ``-EPERM``.
+    """
     try:
-        kids = yield Fork(ctx, n_drafts + 1)
+        kids = yield Fork(ctx, n_drafts + 1, flags=BR_SPECULATIVE)
     except BranchError:   # includes AdmissionDenied
         # permanent page pressure (or a root resolved underneath us):
         # plain greedy decode, no speculation

@@ -1,10 +1,11 @@
-"""Serving entry point: scheduler-driven branchable paged-KV engine.
+"""Serving entry point: the ``repro.api`` surface end to end.
 
-Demo mode pushes a stream of requests through the exploration driver:
-every prompt runs a concurrent best-of-N policy (fork through
-page-budget admission, decode branches in the shared continuous batch,
-score, first-commit-wins commit; graceful unforked degradation under
-page pressure)::
+Demo mode pushes a stream of requests through the exploration driver
+over one :class:`~repro.api.BranchSession`: every prompt runs a
+concurrent best-of-N policy (vectorized ``branch()`` through page-budget
+admission, decode branches in the shared continuous batch, score,
+first-commit-wins commit; graceful unforked degradation under page
+pressure), then prints the session's procfs-style ``tree()`` view::
 
     python -m repro.launch.serve --arch paper-agentic --branches 3
 """
@@ -28,10 +29,10 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=2.0)
     args = ap.parse_args(argv)
 
+    from repro.api import BranchSession
     from repro.configs import get_config, reduced
     from repro.explore_ctx import ExplorationDriver, best_of_n
     from repro.models.model import Model
-    from repro.runtime.scheduler import Scheduler, SchedulerConfig
     from repro.runtime.serve_loop import ServeEngine
 
     cfg = get_config(args.arch)
@@ -42,9 +43,8 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=1024, page_size=8,
                          max_pages_per_seq=64)
-    sched = Scheduler(engine, SchedulerConfig(max_batch=args.max_batch,
-                                              seed=1))
-    driver = ExplorationDriver(sched)
+    session = BranchSession(engine, max_batch=args.max_batch, seed=1)
+    driver = ExplorationDriver(session)
 
     prompts = {}
     for r in range(args.requests):
@@ -71,7 +71,8 @@ def main(argv=None) -> int:
         print(f"request {r}: prompt {prompt} -> {res.generated} "
               f"(best of {res.stats.get('branches', 0)}, "
               f"scores {scores}){note}")
-    print(f"scheduler stats: {sched.stats()}")
+    print("session tree (procfs view):")
+    print(session.format_tree())
     return 0
 
 

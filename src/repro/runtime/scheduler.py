@@ -41,18 +41,11 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 
-from repro.core.errors import BranchError
+# AdmissionDenied now lives in the shared errno vocabulary
+# (repro.core.errors); re-exported here for backward compatibility.
+from repro.core.errors import AdmissionDenied, BranchError, Errno
 from repro.core.lifecycle import BranchStatus
 from repro.runtime.serve_loop import ServeEngine
-
-
-class AdmissionDenied(BranchError):
-    """Raised when admission would overrun the page budget.
-
-    The -EAGAIN of the serving layer: the caller may retry after commits
-    or retirements recycle pages (except for requests rejected at
-    ``submit``, which can *never* fit and should be resized).
-    """
 
 
 @dataclass
@@ -74,7 +67,15 @@ class Request:
 
 
 class Scheduler:
-    """Admission + continuous batching over the engine's live branches."""
+    """Admission + continuous batching over the engine's live branches.
+
+    .. deprecated:: the raw verbs (``submit``/``fork``/``hold``/``wait``/
+       ``finish``/``result``) are the *mechanism* behind
+       :class:`repro.api.BranchSession` and remain stable for internal
+       use, but application code should enter through ``repro.api`` —
+       one handle table, one flags word, one errno discipline, and a
+       poll/wait event interface over every state domain.
+    """
 
     def __init__(self, engine: ServeEngine,
                  config: Optional[SchedulerConfig] = None):
@@ -128,12 +129,13 @@ class Scheduler:
         if worst > self.engine.kv.num_pages:
             raise AdmissionDenied(
                 f"request needs up to {worst} pages but the pool only has "
-                f"{self.engine.kv.num_pages}; it can never be admitted")
+                f"{self.engine.kv.num_pages}; it can never be admitted",
+                errno=Errno.ENOSPC)
         if worst > self.engine.max_pages:
             raise AdmissionDenied(
                 f"request needs up to {worst} pages but a sequence's block "
                 f"table holds at most {self.engine.max_pages}; it can "
-                "never decode to completion")
+                "never decode to completion", errno=Errno.ENOSPC)
         req = Request(req_id=next(self._req_ids), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, worst_pages=worst,
                       hold_on_admit=hold)
@@ -181,15 +183,21 @@ class Scheduler:
         needed, budget = self._fork_cost(seq, n)
         return needed <= budget
 
-    def fork(self, seq: int, n: int) -> List[int]:
+    def fork(self, seq: int, n: int, *, eager_cow: bool = False) -> List[int]:
         """Fork ``n`` exploration branches if the page budget allows.
 
-        Worst case each branch CoW-faults its shared tail page and then
-        grows its table from the fork point to the request's full decode
-        budget; deny the fork (``AdmissionDenied``) rather than let a
-        later decode step hit -ENOSPC.  The frozen origin keeps its own
-        reservation (it holds its pages and resumes when the children
-        resolve), so shared pages are never double-booked.
+        All ``n`` siblings are admitted under ONE reservation-ledger
+        transaction (one cost check, one exclusive commit group) — the
+        vectorized-fork property ``repro.api``'s ``branch(parent, n=k)``
+        builds on.  Worst case each branch CoW-faults its shared tail
+        page and then grows its table from the fork point to the
+        request's full decode budget; deny the fork (``AdmissionDenied``)
+        rather than let a later decode step hit -ENOSPC.  The frozen
+        origin keeps its own reservation (it holds its pages and resumes
+        when the children resolve), so shared pages are never
+        double-booked.  ``eager_cow`` hoists every child's tail-page CoW
+        into one fused device dispatch here (see ``ServeEngine.fork``);
+        the ledger already reserves that page per child.
         """
         needed, budget = self._fork_cost(seq, n)
         if needed > budget:
@@ -197,7 +205,7 @@ class Scheduler:
                 f"fork({seq}, n={n}) needs up to {needed} free "
                 f"pages, budget is {budget} (-EAGAIN)")
         child_cost = needed // n
-        children = self.engine.fork(seq, n)
+        children = self.engine.fork(seq, n, eager_cow=eager_cow)
         owner = self._seq_owner[seq]
         for c in children:
             self._seq_owner[c] = owner
@@ -240,6 +248,11 @@ class Scheduler:
     def is_tracked(self, seq: int) -> bool:
         """Whether this scheduler may still decode ``seq``."""
         return seq in self._seq_owner
+
+    def reserved_pages(self, seq: int) -> int:
+        """Worst-case pages the ledger still reserves for ``seq`` (0 if
+        untracked) — surfaced in ``repro.api``'s ``stat()``."""
+        return self._reserved.get(seq, 0)
 
     def request_of(self, seq: int) -> Optional[Request]:
         """The owning request of a tracked sequence (None if untracked

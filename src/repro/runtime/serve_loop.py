@@ -246,8 +246,23 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # branch ops (the paper's lifecycle, resolved by the shared kernel)
     # ------------------------------------------------------------------
-    def fork(self, seq: int, n: int) -> List[int]:
-        return self.kv.fork(seq, n)   # token tails copied by the hook
+    def fork(self, seq: int, n: int, *, eager_cow: bool = False) -> List[int]:
+        """Fork ``n`` branches (token tails copied by the lifecycle hook).
+
+        With ``eager_cow`` the shared-tail copy-on-write every child
+        would fault at its first append is hoisted into the fork itself
+        and serviced as ONE fused ``_copy_pages`` dispatch for the whole
+        sibling set (``KVBranchManager.fork_batch``) — the vectorized
+        ``branch(parent, n=k)`` hot path of ``repro.api``.  The default
+        stays lazy so a fork that never decodes remains zero-copy.
+        """
+        if not eager_cow:
+            return self.kv.fork(seq, n)
+        children, ops = self.kv.fork_batch(seq, n)
+        if ops:
+            self._service_cow([op.src_page for op in ops],
+                              [op.dst_page for op in ops])
+        return children
 
     def commit(self, seq: int) -> int:
         return self.kv.commit(seq)    # tokens + pages promoted atomically

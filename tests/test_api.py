@@ -1,0 +1,350 @@
+"""repro.api conformance: errno discipline, flags word, handle table,
+vectorized fork, unified eventing.
+
+The acceptance bar for the syscall-faithful surface:
+
+* stale/closed handles fail with ``-EBADF`` (generation counters), never
+  silently address a recycled slot;
+* ``BR_NONBLOCK`` turns page-budget denial into an immediate ``-EAGAIN``
+  instead of blocking;
+* ``BR_ISOLATE`` sibling access is rejected at the handle table;
+* first-commit-wins invalidation is observable through ``poll()``;
+* ``branch(parent, n=k)`` admits all k siblings in one ledger
+  transaction and services their tail CoW in ONE fused device dispatch.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.api import (
+    BR_HOLD,
+    BR_ISOLATE,
+    BR_NESTED,
+    BR_NONBLOCK,
+    BR_SPECULATIVE,
+    EV_ADMITTED,
+    EV_COMMITTED,
+    EV_FINISHED,
+    EV_INVALIDATED,
+    AdmissionDenied,
+    BadHandleError,
+    BranchError,
+    BranchSession,
+    BranchStateError,
+    Errno,
+    PoolExhausted,
+    StaleBranchError,
+    Waiter,
+)
+from repro.configs import get_config
+from repro.core import BranchStore
+from repro.models.model import Model
+from repro.runtime.serve_loop import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def fresh_session(engine_setup, *, store=None, **kw):
+    cfg, model, params = engine_setup
+    kw.setdefault("num_pages", 128)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_pages_per_seq", 16)
+    engine = ServeEngine(model, params, **kw)
+    return BranchSession(engine, store=store, max_batch=8, seed=11)
+
+
+def opened_root(session, prompt=(1, 2, 3), max_new_tokens=12, flags=0):
+    hd = session.open(list(prompt), max_new_tokens, flags)
+    assert session.admitted(hd)
+    return hd
+
+
+# ---------------------------------------------------------------------------
+# errno discipline
+# ---------------------------------------------------------------------------
+
+def test_every_branch_error_carries_shared_errno():
+    assert AdmissionDenied("x").errno is Errno.EAGAIN
+    assert AdmissionDenied("x", errno=Errno.ENOSPC).errno is Errno.ENOSPC
+    assert StaleBranchError("x").errno is Errno.ESTALE
+    assert BadHandleError("x").errno is Errno.EBADF
+    assert BranchStateError("x").errno is Errno.EINVAL
+    assert PoolExhausted("x").errno is Errno.ENOSPC
+    # pre-unification compatibility: the pool error is still a MemoryError
+    assert isinstance(PoolExhausted("x"), MemoryError)
+    assert isinstance(PoolExhausted("x"), BranchError)
+
+
+def test_never_fitting_request_is_enospc_not_eagain(engine_setup):
+    s = fresh_session(engine_setup, num_pages=4)
+    with pytest.raises(AdmissionDenied) as exc:
+        s.open(list(range(100)), max_new_tokens=100)
+    assert exc.value.errno is Errno.ENOSPC
+
+
+# ---------------------------------------------------------------------------
+# handle table: -EBADF via generation counters
+# ---------------------------------------------------------------------------
+
+def test_closed_handle_is_ebadf(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s)
+    s.close(root)
+    for op in (s.stat, s.events, s.tokens, s.abort, s.siblings):
+        with pytest.raises(BadHandleError) as exc:
+            op(root)
+        assert exc.value.errno is Errno.EBADF
+
+
+def test_recycled_slot_does_not_alias_old_handle(engine_setup):
+    s = fresh_session(engine_setup)
+    a = opened_root(s, prompt=(1, 2, 3))
+    s.finish(a)                    # closes + frees the slot
+    b = opened_root(s, prompt=(4, 5, 6))
+    # the new root reuses slot 0 with a bumped generation: the old
+    # handle must NOT resolve to it
+    assert (a >> 16) == (b >> 16) and a != b
+    with pytest.raises(BadHandleError):
+        s.stat(a)
+    assert s.stat(b)["seq"] is not None
+
+
+def test_finish_closes_the_whole_subtree(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    kids = s.branch(root, BR_HOLD, 2)
+    s.finish(root)
+    for hd in [root] + kids:
+        with pytest.raises(BadHandleError):
+            s.events(hd)
+    pool = s.tree()["pool"]
+    assert pool["pages_free"] == pool["pages_total"]
+    assert s.tree()["handles"]["open"] == 0
+
+
+# ---------------------------------------------------------------------------
+# flags word
+# ---------------------------------------------------------------------------
+
+def test_nonblock_fork_returns_eagain_instead_of_blocking(engine_setup):
+    s = fresh_session(engine_setup, num_pages=8)
+    root = opened_root(s, prompt=(1, 2, 3), max_new_tokens=8, flags=BR_HOLD)
+    steps_before = s.steps
+    with pytest.raises(AdmissionDenied) as exc:
+        s.branch(root, BR_NONBLOCK, 8)   # can never fit 8 children
+    assert exc.value.errno is Errno.EAGAIN
+    assert s.steps == steps_before       # truly non-blocking: no stepping
+
+
+def test_blocking_fork_raises_eagain_only_after_proven_stall(engine_setup):
+    s = fresh_session(engine_setup, num_pages=8)
+    root = opened_root(s, prompt=(1, 2, 3), max_new_tokens=8, flags=BR_HOLD)
+    steps_before = s.steps
+    with pytest.raises(AdmissionDenied):
+        s.branch(root, 0, 8)
+    assert s.steps > steps_before        # it tried to let work drain first
+
+
+def test_isolate_rejects_sibling_access_at_handle_table(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    iso = s.branch(root, BR_ISOLATE | BR_HOLD, 2)
+    with pytest.raises(BranchError) as exc:
+        s.siblings(iso[0])
+    assert exc.value.errno is Errno.EPERM
+    open_kids = s.branch(iso[0], BR_HOLD | BR_NESTED, 2)
+    assert set(s.siblings(open_kids[0])) == set(open_kids)
+
+
+def test_nested_fork_requires_br_nested(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    (kid,) = s.branch(root, BR_HOLD, 1)
+    with pytest.raises(BranchError) as exc:
+        s.branch(kid, BR_HOLD, 2)        # fork-of-fork without BR_NESTED
+    assert exc.value.errno is Errno.EINVAL
+    grandkids = s.branch(kid, BR_HOLD | BR_NESTED, 2)
+    assert len(grandkids) == 2
+
+
+def test_truncate_requires_br_speculative(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    (plain,) = s.branch(root, 0, 1)
+    (draft,) = s.branch(root, BR_SPECULATIVE, 1)
+    s.wait([plain, draft], produced=3, require_all=True)
+    with pytest.raises(BranchError) as exc:
+        s.truncate(plain, 1)
+    assert exc.value.errno is Errno.EPERM
+    s.truncate(draft, 1)                 # declared draft: allowed
+    assert len(s.tokens(draft)) == len(s.tokens(root)) + 1
+
+
+# ---------------------------------------------------------------------------
+# unified eventing
+# ---------------------------------------------------------------------------
+
+def test_first_commit_wins_invalidation_observed_through_poll(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    kids = s.branch(root, 0, 3)
+    s.wait(kids, produced=2, require_all=True)
+    assert s.poll(kids) == {}            # nothing resolved yet
+    s.commit(kids[1])
+    ready = s.poll(kids)
+    assert ready[kids[1]] & EV_COMMITTED
+    assert ready[kids[0]] & EV_INVALIDATED
+    assert ready[kids[2]] & EV_INVALIDATED
+    # the losers' scheduler/kernel state is gone too, not just flagged
+    assert not s.alive(kids[0]) and not s.alive(kids[2])
+    with pytest.raises(StaleBranchError):
+        s.commit(kids[2])
+
+
+def test_commit_loser_raises_estale_with_errno(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    kids = s.branch(root, BR_HOLD, 2)
+    s.commit(kids[0])
+    with pytest.raises(StaleBranchError) as exc:
+        s.commit(kids[1])
+    assert exc.value.errno is Errno.ESTALE
+
+
+def test_waiter_finished_event_and_result(engine_setup):
+    s = fresh_session(engine_setup)
+    root = s.open([5, 6, 7], max_new_tokens=4)
+    ready = Waiter(s).add(root, EV_FINISHED).wait(timeout_steps=50)
+    assert ready[root] & EV_FINISHED
+    toks = s.result(root)
+    assert len(toks) == 3 + 4
+    assert s.finish(root) == toks        # finish returns the same claim
+    assert s.finish(root) is None        # ...and is idempotent after close
+
+
+def test_admission_event_fires_when_fifo_drains(engine_setup):
+    s = fresh_session(engine_setup, num_pages=8)
+    first = s.open([1, 2, 3], max_new_tokens=17)     # 5 of 8 pool pages
+    second = s.open([4, 5, 6], max_new_tokens=17)    # FIFO-blocked
+    assert not s.events(second) & EV_ADMITTED
+    ready = s.wait([second], events=EV_ADMITTED, timeout_steps=100)
+    assert ready[second] & EV_ADMITTED
+    s.finish(first), s.finish(second)
+
+
+def test_branch_sees_admission_that_happened_during_steps(engine_setup):
+    """A root admitted from the FIFO while the caller was stepping must
+    be forkable without an explicit events()/admitted() call first."""
+    s = fresh_session(engine_setup, num_pages=8)
+    first = s.open([1, 2, 3], max_new_tokens=17)     # 5 of 8 pool pages
+    second = s.open([4, 5, 6], max_new_tokens=5, flags=BR_HOLD)
+    while not s.sched.finished(s.req_id_of(first)):
+        s.step()                                     # admits second inside
+    kids = s.branch(second, BR_HOLD, 2)              # no refresh needed
+    assert len(kids) == 2
+    s.finish(second)
+
+
+def test_branch_after_request_finished_is_clean_einval(engine_setup):
+    s = fresh_session(engine_setup)
+    root = s.open([1, 2, 3], max_new_tokens=3)
+    s.wait([root], events=EV_FINISHED, timeout_steps=50)
+    with pytest.raises(BranchStateError) as exc:
+        s.branch(root, BR_HOLD, 2)
+    assert "finished" in str(exc.value)              # not a raw internal
+    assert exc.value.errno is Errno.EINVAL
+
+
+def test_finish_through_child_handle_claims_result(engine_setup):
+    """finish() via a non-root handle must still claim the one-shot
+    scheduler result (no stranded _results records) and return it."""
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    (kid,) = s.branch(root, 0, 1)
+    s.wait([kid], produced=2, require_all=True)
+    s.commit(kid)
+    toks = s.finish(kid)
+    assert toks is not None and toks[:3] == [1, 2, 3]
+    assert s.sched._results == {}                    # nothing stranded
+
+
+# ---------------------------------------------------------------------------
+# vectorized fork
+# ---------------------------------------------------------------------------
+
+def test_vectorized_fork_single_fused_cow_dispatch(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, prompt=(1, 2, 3), max_new_tokens=12,
+                       flags=BR_HOLD)   # 2 cached tokens: mid-page tail
+    d0, f0 = s.engine.cow_dispatches, s.engine.cow_faults
+    kids = s.branch(root, 0, 4)
+    assert s.engine.cow_dispatches == d0 + 1   # ONE fused dispatch
+    assert s.engine.cow_faults == f0 + 4       # ...covering all 4 tails
+    # the eager CoW really privatized the tails: decoding the siblings
+    # afterwards faults nothing
+    s.wait(kids, produced=2, require_all=True)
+    assert s.engine.cow_dispatches == d0 + 1
+
+
+def test_sequential_forks_pay_one_dispatch_each(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, prompt=(1, 2, 3), max_new_tokens=12,
+                       flags=BR_HOLD)
+    d0 = s.engine.cow_dispatches
+    for _ in range(3):
+        s.branch(root, BR_HOLD, 1)
+    assert s.engine.cow_dispatches == d0 + 3
+
+
+def test_vectorized_fork_one_ledger_group(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    kids = s.branch(root, BR_HOLD, 3)
+    groups = {s.engine.kv.tree.node(s.seq_of(hd)).group for hd in kids}
+    assert len(groups) == 1              # one exclusive commit group
+    seq_kids = [s.branch(root, BR_HOLD, 1)[0] for _ in range(2)]
+    seq_groups = {s.engine.kv.tree.node(s.seq_of(hd)).group
+                  for hd in seq_kids}
+    assert len(seq_groups) == 2          # sequential: separate groups
+
+
+# ---------------------------------------------------------------------------
+# composite sessions (store domain rides the same verbs)
+# ---------------------------------------------------------------------------
+
+def test_composite_branch_commit_promotes_store_domain(engine_setup):
+    store = BranchStore({"plan": b"root"})
+    s = fresh_session(engine_setup, store=store)
+    root = opened_root(s, flags=BR_HOLD)
+    kids = s.branch(root, BR_HOLD, 2)
+    for i, hd in enumerate(kids):
+        s.state_of(hd).write("plan", f"branch-{i}".encode())
+    s.commit(kids[1])
+    assert s.state_of(root).read("plan") == b"branch-1"
+    s.finish(root)
+    assert len(store._tree) == 1         # exploration subtree reaped
+
+
+def test_introspection_stat_and_tree(engine_setup):
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    kids = s.branch(root, BR_HOLD | BR_SPECULATIVE, 2)
+    st = s.stat(kids[0])
+    assert st["depth"] == 1 and st["parent"] == root
+    assert "BR_SPECULATIVE" in st["flags"] and "BR_HOLD" in st["flags"]
+    assert st["status"] == "active" and st["held"]
+    view = s.tree()
+    assert view["handles"]["open"] == 3
+    assert view["pool"]["pages_reserved"] > 0
+    (root_node,) = view["branches"]
+    assert len(root_node["children"]) == 2
+    assert "frozen" == root_node["status"]
+    assert s.format_tree()               # renders without crashing
