@@ -9,6 +9,7 @@ so the perf trajectory is tracked across PRs.  Tables:
   serving-scale branching -> kvbranch_bench
   vectorized fork fan-out -> fork_fanout
   serve throughput        -> serve_throughput
+  sharded (tp) serving    -> shard_serve
   in-program exploration  -> explore_bench
   exploration policies    -> explore_policies
 """
@@ -51,6 +52,7 @@ def main(argv=None) -> None:
         fork_fanout,
         kvbranch_bench,
         serve_throughput,
+        shard_serve,
         throughput,
     )
 
@@ -61,6 +63,7 @@ def main(argv=None) -> None:
         ("kvbranch_bench", kvbranch_bench),
         ("fork_fanout", fork_fanout),
         ("serve_throughput", serve_throughput),
+        ("shard_serve", shard_serve),
         ("explore_bench", explore_bench),
         ("explore_policies", explore_policies),
     ]

@@ -601,6 +601,13 @@ class BranchSession:
     def steps(self) -> int:
         return self.sched.steps
 
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel width of the underlying serving mesh (1 when
+        single-device).  Handles, flags and errno semantics are
+        identical either way — sharding is invisible above the engine."""
+        return self.sched.tp
+
     def step(self, **decode_kw: Any) -> Dict[str, Any]:
         """One scheduling round (admission, batched decode, retirement)."""
         return self.sched.step(**decode_kw)
@@ -706,6 +713,7 @@ class BranchSession:
                 "waiting": st["waiting"],
                 "running": st["running"],
                 "held": st["held"],
+                "tp": st.get("tp", 1),
             },
             "handles": {
                 "open": len(self.open_handles()),

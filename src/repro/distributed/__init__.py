@@ -1,15 +1,24 @@
 """Distribution substrate: mesh/axis conventions, sharding rules,
 custom collectives (compression, overlap)."""
 
-from repro.distributed.mesh import ParallelPlan, SINGLE_DEVICE
+from repro.distributed.compat import shard_map
+from repro.distributed.mesh import (
+    ParallelPlan,
+    SINGLE_DEVICE,
+    serving_mesh,
+    serving_plan,
+)
 from repro.distributed.sharding import (
     batch_spec,
+    kv_page_spec,
     param_shardings,
+    serve_param_specs,
     shard_params,
     state_shardings,
 )
 
 __all__ = [
-    "ParallelPlan", "SINGLE_DEVICE", "batch_spec", "param_shardings",
-    "shard_params", "state_shardings",
+    "ParallelPlan", "SINGLE_DEVICE", "batch_spec", "kv_page_spec",
+    "param_shardings", "serve_param_specs", "serving_mesh",
+    "serving_plan", "shard_map", "shard_params", "state_shardings",
 ]

@@ -1,0 +1,49 @@
+"""JAX API compatibility shims for the distribution substrate.
+
+``shard_map`` moved twice across the JAX versions this repo targets:
+
+* old releases expose ``jax.experimental.shard_map.shard_map`` with a
+  ``check_rep=`` kwarg;
+* new releases promote it to ``jax.shard_map`` and rename the
+  replication check to ``check_vma=`` (the experimental module is
+  removed).
+
+Every ``shard_map`` call in this repo goes through :func:`shard_map`
+below, which resolves the best available implementation once at import
+time and translates the check kwarg — so model/collective code is
+version-agnostic and new call sites cannot reintroduce a bare
+``jax.shard_map`` dependency.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+_IMPL: Callable[..., Any]
+try:                                     # new API: jax.shard_map
+    _IMPL = jax.shard_map               # type: ignore[attr-defined]
+except AttributeError:                   # old API: experimental module
+    from jax.experimental.shard_map import shard_map as _IMPL
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+_CHECK_KWARG = ("check_vma"
+                if "check_vma" in inspect.signature(_IMPL).parameters
+                else "check_rep")
+
+
+def shard_map(f: Callable[..., Any], *, mesh: Any, in_specs: Any,
+              out_specs: Any, check_rep: bool = True) -> Callable[..., Any]:
+    """Version-agnostic ``shard_map``.
+
+    Same contract as the underlying implementation; ``check_rep`` maps
+    onto whichever replication-check kwarg the installed JAX spells
+    (``check_rep`` or ``check_vma``).
+    """
+    return _IMPL(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 **{_CHECK_KWARG: check_rep})
+
+
+__all__ = ["shard_map"]

@@ -69,4 +69,46 @@ def plan_from_mesh(mesh: Mesh) -> ParallelPlan:
     axes = mesh.axis_names
     dp = tuple(a for a in ("pod", "data") if a in axes)
     tp = "model" if "model" in axes else None
+    if tp is None and "tp" in axes:
+        tp = "tp"                      # serving meshes (see serving_mesh)
     return ParallelPlan(mesh=mesh, dp_axes=dp, tp_axis=tp)
+
+
+# ---------------------------------------------------------------------------
+# serving meshes
+# ---------------------------------------------------------------------------
+
+def serving_mesh(tp: int) -> Mesh:
+    """A 1-D tensor-parallel mesh for the branch-serving hot loop.
+
+    The axis is named ``tp``: serving shards only the per-token compute
+    (attention heads / d_ff / experts / KV pages on the kv-head dim) —
+    there is no data/FSDP axis because the decode batch is one
+    continuous batch whose host-side branch bookkeeping (block tables,
+    scheduler ledger, lifecycle tree) stays replicated and
+    device-agnostic.
+    """
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if tp > len(jax.devices()):
+        raise ValueError(
+            f"tp={tp} exceeds the {len(jax.devices())} visible devices")
+    return jax.make_mesh((tp,), ("tp",))
+
+
+def serving_plan(mesh: Optional[Mesh]) -> ParallelPlan:
+    """ParallelPlan for a serving mesh (``None`` -> single device).
+
+    Accepts either a dedicated ``tp``-axis mesh from
+    :func:`serving_mesh` or any mesh carrying a ``model`` axis (its
+    tensor-parallel axis is reused; ``data``/``pod`` axes are ignored by
+    serving, which keeps the batch replicated).
+    """
+    if mesh is None:
+        return SINGLE_DEVICE
+    if "tp" in mesh.axis_names:
+        return ParallelPlan(mesh=mesh, dp_axes=(), tp_axis="tp")
+    if "model" in mesh.axis_names:
+        return ParallelPlan(mesh=mesh, dp_axes=(), tp_axis="model")
+    raise ValueError(
+        f"serving mesh needs a 'tp' or 'model' axis, got {mesh.axis_names}")

@@ -226,3 +226,51 @@ def state_shardings(cfg: ArchConfig, plan: ParallelPlan,
             sanitize(plan, cache_spec(cfg, plan, k, v.shape), v.shape))
         for k, v in cache.items()
     }
+
+
+# ---------------------------------------------------------------------------
+# serving (tensor-parallel decode over paged KV)
+# ---------------------------------------------------------------------------
+
+def _retarget(spec: P, tp_axis: str) -> P:
+    """Map the training rules onto a serving plan: the ``model`` axis
+    becomes the plan's tp axis and the ``data``/``pod`` axes are dropped
+    (inference is TP-only residency — no FSDP all-gather per step)."""
+    def one(a):
+        if a in ("data", "pod") or (isinstance(a, (tuple, list))):
+            return None
+        return tp_axis if a == "model" else a
+    return P(*(one(a) for a in spec))
+
+
+def serve_param_specs(cfg: ArchConfig, plan: ParallelPlan,
+                      params: Any) -> Any:
+    """PartitionSpec tree for the serving hot loop's ``shard_map``.
+
+    Derived from the training rules (:func:`spec_for_param`) with the
+    tensor-parallel axis retargeted onto ``plan.tp_axis`` and every
+    data/FSDP assignment dropped — attention heads, kv heads, d_ff and
+    experts shard over tp; norms, embeddings and the router replicate.
+    Non-dividing dims fall back to replicated (``sanitize``); dims whose
+    sharding a psum *depends on* (kv heads, d_ff, experts) are validated
+    up front by :meth:`ServeEngine <repro.runtime.serve_loop.ServeEngine>`
+    so the fallback can never silently break the reduction.
+    """
+    def one(path, leaf):
+        spec = _retarget(spec_for_param(cfg, path, leaf.shape),
+                         plan.tp_axis)
+        return sanitize(plan, spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def kv_page_spec(plan: ParallelPlan) -> P:
+    """Spec for the paged KV pools ``[L, n_pages, page, kv, hd]``.
+
+    Pages shard on the **kv-head dim**: a page id means the same thing
+    on every shard, so the host-side block tables, refcounts and CoW
+    plans stay device-agnostic — one fork/commit is still one metadata
+    operation plus (at most) one fused ``_copy_pages`` dispatch, and
+    each shard copies only its slice of the faulted page.
+    """
+    return P(None, None, None, plan.tp_axis, None)

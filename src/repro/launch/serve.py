@@ -8,6 +8,12 @@ first-commit-wins commit; graceful unforked degradation under page
 pressure), then prints the session's procfs-style ``tree()`` view::
 
     python -m repro.launch.serve --arch paper-agentic --branches 3
+
+``--tp N`` runs the decode hot loop tensor-parallel over an N-device
+serving mesh (DESIGN §11) — weights and KV pages shard, branch
+bookkeeping stays host-side, and the served tokens are identical to
+``--tp 1`` for the same seed.  On a CPU-only host, force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -27,6 +33,9 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=2.0)
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel width of the serving mesh "
+                         "(default: single-device)")
     args = ap.parse_args(argv)
 
     from repro.api import BranchSession
@@ -42,8 +51,11 @@ def main(argv=None) -> int:
     model = Model(cfg, attn_chunk=8, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=1024, page_size=8,
-                         max_pages_per_seq=64)
+                         max_pages_per_seq=64, tp=args.tp)
     session = BranchSession(engine, max_batch=args.max_batch, seed=1)
+    if session.tp > 1:
+        print(f"serving mesh: tp={session.tp} over "
+              f"{len(jax.devices())} devices")
     driver = ExplorationDriver(session)
 
     prompts = {}

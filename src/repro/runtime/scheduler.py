@@ -101,6 +101,14 @@ class Scheduler:
         self.steps = 0
         self.tokens_generated = 0
 
+    @property
+    def tp(self) -> int:
+        """Tensor-parallel width of the engine's serving mesh (1 when
+        single-device).  The scheduler itself is mesh-agnostic: its
+        ledger counts pages, and a page id means the same thing on
+        every shard."""
+        return self.engine.tp
+
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------

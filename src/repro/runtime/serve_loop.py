@@ -25,6 +25,16 @@ Admission, continuous batching and fork admission live in
 :mod:`repro.runtime.scheduler`; this module is only the device step plus
 the per-sequence state domains.
 
+**Sharded serving** (DESIGN §11): constructing the engine with ``tp=``
+or ``mesh=`` rebases the hot loop onto a tensor-parallel device mesh —
+weights shard per the training rules (heads / d_ff / experts over the
+tp axis), the KV pools shard on the **kv-head dim**, and the decode
+step runs under one compat-shimmed ``shard_map`` so a step is still one
+device dispatch.  All branch bookkeeping (block tables, refcounts, the
+lifecycle tree, token tails) is host-side integer metadata and stays
+replicated/device-agnostic; fork/commit cost does not change with mesh
+size.  Unset, behavior is exactly the single-device path.
+
 Only attention-family archs use paged KV; SSM archs branch their
 recurrent state through the BranchStore instead (DESIGN §6).
 """
@@ -37,9 +47,14 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import KVBranchManager
+from repro.distributed.compat import shard_map
+from repro.distributed.mesh import ParallelPlan, serving_mesh, serving_plan
+from repro.distributed.sharding import kv_page_spec, serve_param_specs
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.models import layers as L
 from repro.models.model import Model
@@ -47,8 +62,84 @@ from repro.models.transformer import embed_tokens, lm_head
 
 
 # ---------------------------------------------------------------------------
-# jitted paged decode step (dense/moe families)
+# paged decode step (dense/moe families) — one body, two bindings:
+# the single-device jit and the shard_map'd tensor-parallel step
 # ---------------------------------------------------------------------------
+
+def _decode_body(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,       # [L, n_pages, page, kv(_local), hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [b, max_pages]
+    lengths: jax.Array,       # [b] length BEFORE this token
+    slot_pages: jax.Array,    # [b] page for this token's KV
+    slot_offsets: jax.Array,  # [b] offset within that page
+    tokens: jax.Array,        # [b, 1]
+    *,
+    impl: str,
+    axis_name: Optional[str] = None,
+):
+    """One decode step over paged KV.  Returns (logits, k_pages, v_pages).
+
+    With ``axis_name`` the body runs *shard-local* under ``shard_map``:
+    weights arrive as tensor-parallel slices (heads / kv heads / d_ff /
+    experts over the axis), the KV pools carry only the local kv-head
+    slice, and the two contractions whose reduction dim is sharded
+    (attention output over heads, MLP/MoE down-projection) psum across
+    the axis.  Block tables, lengths and slots are replicated — page
+    ids mean the same thing on every shard, so the host-side CoW
+    bookkeeping is mesh-agnostic.
+    """
+    b = tokens.shape[0]
+    h = embed_tokens(cfg, params, tokens)
+
+    def combine(x):
+        return jax.lax.psum(x, axis_name) if axis_name else x
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], x, lengths[:, None])
+        # write this token's K/V into its (possibly CoW'd) page slot
+        kp = kp.at[slot_pages, slot_offsets].set(k[:, 0])
+        vp = vp.at[slot_pages, slot_offsets].set(v[:, 0])
+        # heads are kv-major (head = kv * g + g_idx), so a contiguous
+        # head shard is a contiguous kv-head shard: local shapes fall
+        # out of the projection weights
+        kvh = k.shape[2]
+        g = q.shape[2] // kvh
+        qh = q.reshape(b, kvh, g, cfg.head_dim)
+        a = paged_attention(qh, kp, vp, block_tables, lengths + 1,
+                            impl=impl)
+        a = a.reshape(b, 1, kvh * g, cfg.head_dim)
+        h = h + combine(jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"]))
+        x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            from repro.models.moe import moe_apply_local, moe_block
+
+            if axis_name is None:
+                m, _ = moe_block(cfg, lp["moe"], x)
+            else:
+                # expert-parallel slice of the MoE FFN; the EP combine
+                # is the same psum a TP MLP needs (DESIGN §5)
+                mp = lp["moe"]
+                e_loc = mp["wu"].shape[0]
+                e0 = (jax.lax.axis_index(axis_name) * e_loc).astype(
+                    jnp.int32)
+                y, _ = moe_apply_local(
+                    cfg, x.reshape(-1, cfg.d_model), mp["router"],
+                    mp.get("wg"), mp["wu"], mp["wd"], e0)
+                m = combine(y).reshape(b, 1, cfg.d_model)
+        else:
+            m = combine(L.mlp_block(cfg, lp["mlp"], x))
+        return h + m, (kp, vp)
+
+    h, (k_pages, v_pages) = jax.lax.scan(
+        body, h, (params["layers"], k_pages, v_pages))
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_head(cfg, params, h), k_pages, v_pages
+
 
 @partial(jax.jit, static_argnames=("cfg", "impl"))
 def paged_decode_step(
@@ -63,36 +154,59 @@ def paged_decode_step(
     tokens: jax.Array,        # [b, 1]
     impl: str = "ref",
 ):
-    """One decode step over paged KV.  Returns (logits, k_pages, v_pages)."""
-    b = tokens.shape[0]
-    kvh, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
-    h = embed_tokens(cfg, params, tokens)
+    """One decode step over paged KV (single device)."""
+    return _decode_body(cfg, params, k_pages, v_pages, block_tables,
+                        lengths, slot_pages, slot_offsets, tokens,
+                        impl=impl)
 
-    def body(h, xs):
-        lp, kp, vp = xs
-        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
-        q, k, v = L.qkv_project(cfg, lp["attn"], x, lengths[:, None])
-        # write this token's K/V into its (possibly CoW'd) page slot
-        kp = kp.at[slot_pages, slot_offsets].set(k[:, 0])
-        vp = vp.at[slot_pages, slot_offsets].set(v[:, 0])
-        qh = q.reshape(b, kvh, g, cfg.head_dim)
-        a = paged_attention(qh, kp, vp, block_tables, lengths + 1,
-                            impl=impl)
-        a = a.reshape(b, 1, cfg.num_heads, cfg.head_dim)
-        h = h + jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
-        x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
-        if cfg.is_moe:
-            from repro.models.moe import moe_block
 
-            m, _ = moe_block(cfg, lp["moe"], x)
-        else:
-            m = L.mlp_block(cfg, lp["mlp"], x)
-        return h + m, (kp, vp)
+def serve_specs(cfg: ArchConfig, plan: ParallelPlan, params: Any) -> Any:
+    """The engine's parameter spec tree (training rules retargeted to
+    the serving tp axis).  Multi-codebook heads keep their vocab dim
+    replicated: the ``[b, s, cb, V]`` reshape inside ``lm_head`` needs
+    the full codebook-major vocab on every shard."""
+    specs = serve_param_specs(cfg, plan, params)
+    if cfg.num_codebooks > 1 and "lm_head" in specs:
+        specs["lm_head"] = P(*(None,) * params["lm_head"].ndim)
+    return specs
 
-    h, (k_pages, v_pages) = jax.lax.scan(
-        body, h, (params["layers"], k_pages, v_pages))
-    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
-    return lm_head(cfg, params, h), k_pages, v_pages
+
+def build_tp_decode_step(cfg: ArchConfig, plan: ParallelPlan, params: Any,
+                         *, impl: str = "ref",
+                         specs: Optional[Any] = None):
+    """The tensor-parallel decode step: ``_decode_body`` under ONE
+    compat-shimmed ``shard_map`` so a whole fork/explore/commit step
+    still costs one device dispatch.
+
+    Weights and KV pages arrive pre-sharded (the engine places them at
+    construction); block tables / lengths / slots / tokens replicate.
+    Logits leave replicated — a vocab-sharded head is all-gathered
+    *inside* the mapped function so sampling stays mesh-agnostic.
+    """
+    if specs is None:
+        specs = serve_specs(cfg, plan, params)
+    lm_spec = specs.get("lm_head")
+    gather_logits = lm_spec is not None and plan.tp_axis in tuple(lm_spec)
+    kv_spec = kv_page_spec(plan)
+    rep = P()
+
+    def local_step(p, kp, vp, bt, lengths, slot_pages, slot_offsets,
+                   tokens):
+        logits, kp, vp = _decode_body(
+            cfg, p, kp, vp, bt, lengths, slot_pages, slot_offsets,
+            tokens, impl=impl, axis_name=plan.tp_axis)
+        if gather_logits:
+            logits = jax.lax.all_gather(
+                logits, plan.tp_axis, axis=logits.ndim - 1, tiled=True)
+        return logits, kp, vp
+
+    fn = shard_map(
+        local_step, mesh=plan.mesh,
+        in_specs=(specs, kv_spec, kv_spec, rep, rep, rep, rep, rep),
+        out_specs=(rep, kv_spec, kv_spec),
+        check_rep=False,
+    )
+    return jax.jit(fn)
 
 
 @partial(jax.jit, donate_argnums=(0, 1))
@@ -190,13 +304,39 @@ class TokenDomain:
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, num_pages: int = 256,
                  page_size: int = 16, max_pages_per_seq: int = 32,
-                 attn_impl: str = "ref"):
+                 attn_impl: str = "ref", mesh: Optional[Mesh] = None,
+                 tp: Optional[int] = None):
         cfg = model.cfg
         assert cfg.family in ("dense", "vlm", "audio", "moe"), (
             "paged-KV serving targets attention archs; SSM archs branch "
             "their recurrent state via BranchStore (DESIGN §6)")
         self.model = model
         self.cfg = cfg
+        # --- serving mesh (tensor-parallel decode) --------------------
+        # `tp=`/`mesh=` shard the hot loop; unset keeps the exact
+        # single-device path.  Branch bookkeeping (block tables,
+        # refcounts, lifecycle tree, token tails) is host-side and
+        # device-agnostic either way.
+        if mesh is None and tp is not None:
+            mesh = serving_mesh(tp)
+        self.mesh = mesh
+        self.plan = serving_plan(mesh)
+        self.tp = self.plan.tp_size
+        if tp is not None and tp != self.tp:
+            raise ValueError(
+                f"tp={tp} contradicts the given mesh's tensor-parallel "
+                f"width {self.tp}; pass one or the other")
+        specs = None
+        if self.plan.is_distributed:
+            self._check_tp_divisibility(cfg, self.tp)
+            specs = serve_specs(cfg, self.plan, params)
+            shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), specs,
+                is_leaf=lambda s: isinstance(s, P))
+            params = jax.device_put(params, shardings)
+            self._kv_sharding = NamedSharding(mesh, kv_page_spec(self.plan))
+        else:
+            self._kv_sharding = None
         self.params = params
         self.kv = KVBranchManager(num_pages=num_pages, page_size=page_size)
         self.page_size = page_size
@@ -205,8 +345,15 @@ class ServeEngine:
         dt = jnp.dtype(cfg.dtype)
         shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
                  cfg.head_dim)
-        self.k_pages = jnp.zeros(shape, dt)
-        self.v_pages = jnp.zeros(shape, dt)
+        # allocate the pools directly into their mesh sharding — a pool
+        # sized for aggregate-mesh HBM must never transit one device
+        kv_kw = ({} if self._kv_sharding is None
+                 else {"device": self._kv_sharding})
+        self.k_pages = jnp.zeros(shape, dt, **kv_kw)
+        self.v_pages = jnp.zeros(shape, dt, **kv_kw)
+        self._tp_step = (build_tp_decode_step(cfg, self.plan, params,
+                                              impl=attn_impl, specs=specs)
+                         if self.plan.is_distributed else None)
         # Token tails ride the same lifecycle kernel as the page tables:
         # kv.commit/abort/invalidate resolves both domains atomically.
         self.token_domain = TokenDomain()
@@ -214,6 +361,36 @@ class ServeEngine:
         # CoW fault-service instrumentation (benchmarks read these)
         self.cow_dispatches = 0   # fused _copy_pages device calls
         self.cow_faults = 0       # individual page copies serviced
+
+    @staticmethod
+    def _check_tp_divisibility(cfg: ArchConfig, tp: int) -> None:
+        """Refuse a mesh the psums could not be correct on.
+
+        ``sanitize`` silently replicates a non-dividing dim — fine for
+        output-dim sharding (vocab), catastrophic for a dim the body
+        psums over: every shard would compute the full reduction and
+        the psum would multiply it by ``tp``.  Those dims must divide.
+        """
+        if cfg.num_kv_heads % tp or cfg.num_heads % tp:
+            raise ValueError(
+                f"tp={tp} must divide num_kv_heads={cfg.num_kv_heads} "
+                f"and num_heads={cfg.num_heads} (KV pages and attention "
+                "output shard on the head dims)")
+        if cfg.is_moe:
+            if cfg.num_experts % tp:
+                raise ValueError(
+                    f"tp={tp} must divide num_experts={cfg.num_experts}")
+        elif cfg.d_ff % tp:
+            raise ValueError(
+                f"tp={tp} must divide d_ff={cfg.d_ff} (MLP down-proj "
+                "psums over the sharded d_ff dim)")
+
+    def _pin_kv(self, pages: jax.Array) -> jax.Array:
+        """Place a KV pool on its mesh sharding (no-op single-device, and
+        free when the array already has the target sharding)."""
+        if self._kv_sharding is None:
+            return pages
+        return jax.device_put(pages, self._kv_sharding)
 
     # ------------------------------------------------------------------
     def add_request(self, prompt: Sequence[int]) -> int:
@@ -240,6 +417,11 @@ class ServeEngine:
                     k[:, lo:hi])
                 self.v_pages = self.v_pages.at[:, page, : hi - lo].set(
                     v[:, lo:hi])
+            # eager scatter of an unsharded prefill cache can drift the
+            # pool's layout; re-pin so the hot loop never pays a
+            # per-step reshard at the shard_map boundary
+            self.k_pages = self._pin_kv(self.k_pages)
+            self.v_pages = self._pin_kv(self.v_pages)
         self.token_domain.seed(sid, prompt)
         return sid
 
@@ -289,10 +471,18 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _service_cow(self, src: List[int], dst: List[int]) -> None:
-        """Service all pending CoW faults in one fused device dispatch."""
+        """Service all pending CoW faults in one fused device dispatch.
+
+        Unchanged under a mesh: page indices are kv-head-agnostic, so
+        the same gather/scatter partitions cleanly over the sharded
+        kv-head dim — each shard copies its slice of every faulted
+        page, still ONE dispatch for the whole batch.
+        """
         s, d = _pad_pow2(src, dst)
         self.k_pages, self.v_pages = _copy_pages(
             self.k_pages, self.v_pages, s, d)
+        self.k_pages = self._pin_kv(self.k_pages)
+        self.v_pages = self._pin_kv(self.v_pages)
         self.cow_dispatches += 1
         self.cow_faults += len(src)
 
@@ -347,13 +537,19 @@ class ServeEngine:
         last_tokens = jnp.asarray(
             [[self.token_domain.get(s)[-1]] for s in seq_ids], jnp.int32)
 
-        logits, self.k_pages, self.v_pages = paged_decode_step(
-            self.cfg, self.params, self.k_pages, self.v_pages,
+        step_args = (
+            self.k_pages, self.v_pages,
             jnp.asarray(bt), jnp.asarray(lengths_before),
             jnp.asarray([sl.page for sl in slots], jnp.int32),
             jnp.asarray([sl.offset for sl in slots], jnp.int32),
-            last_tokens, impl=self.attn_impl,
+            last_tokens,
         )
+        if self._tp_step is not None:
+            logits, self.k_pages, self.v_pages = self._tp_step(
+                self.params, *step_args)
+        else:
+            logits, self.k_pages, self.v_pages = paged_decode_step(
+                self.cfg, self.params, *step_args, impl=self.attn_impl)
         logits = logits[:, 0]
         if all(greedy_row):
             nxt = jnp.argmax(logits, axis=-1)
@@ -376,4 +572,5 @@ class ServeEngine:
         st["token_tails"] = len(self.token_domain)
         st["cow_dispatches"] = self.cow_dispatches
         st["cow_faults"] = self.cow_faults
+        st["tp"] = self.tp
         return st

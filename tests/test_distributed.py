@@ -141,24 +141,149 @@ def test_ring_allreduce_and_quantized_psum():
         mesh = jax.make_mesh((8,), ("pod",))
         x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
 
-        ring = jax.jit(jax.shard_map(
+        from repro.distributed import shard_map
+
+        ring = jax.jit(shard_map(
             lambda v: ring_allreduce(v, "pod", 8), mesh=mesh,
             in_specs=P("pod", None), out_specs=P("pod", None),
-            check_vma=False))
+            check_rep=False))
         got = ring(x)
         want = jnp.tile(x.sum(0, keepdims=True), (8, 1))
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-6)
 
-        qsum = jax.jit(jax.shard_map(
+        qsum = jax.jit(shard_map(
             lambda v: psum_quantized(v, "pod"), mesh=mesh,
             in_specs=P("pod", None), out_specs=P("pod", None),
-            check_vma=False))
+            check_rep=False))
         got_q = qsum(x)
         # int8 quantization: bounded relative error vs exact psum
         err = np.abs(np.asarray(got_q) - np.asarray(want))
         assert err.max() <= np.abs(np.asarray(x)).max() / 127 * 8 + 1e-5
     """)
+
+
+def test_tp_serving_matches_single_device():
+    """tp=1/2/4 serving meshes are token-identical to the unset
+    single-device engine through a fork -> explore -> commit cycle,
+    including a lazy CoW fault serviced under shard_map, with the
+    fused-dispatch count unchanged."""
+    run_in_subprocess("""
+        import dataclasses, jax
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.runtime.serve_loop import ServeEngine
+
+        cfg = dataclasses.replace(get_config("paper-agentic"),
+                                  dtype="float32", num_layers=2)
+        model = Model(cfg, attn_chunk=8, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def cycle(tp):
+            eng = ServeEngine(model, params, num_pages=64, page_size=4,
+                              max_pages_per_seq=16, tp=tp)
+            sid = eng.add_request([1, 2, 3, 4, 5])
+            toks = [eng.decode([sid])]
+            kids = eng.fork(sid, 2)          # lazy CoW: faults on decode
+            for _ in range(3):
+                toks.append(eng.decode(kids))
+            parent = eng.commit(kids[0])     # sibling invalidated
+            toks.append(eng.decode([parent]))
+            return toks, eng.cow_dispatches, eng.cow_faults, eng.tp
+
+        base = cycle(None)
+        assert base[3] == 1
+        for tp in (1, 2, 4):
+            got = cycle(tp)
+            assert got[3] == tp
+            assert got[:3] == base[:3], (tp, got, base)
+    """, n_devices=4)
+
+
+def test_tp_moe_serving_matches_single_device():
+    """The expert-parallel decode arm (moe_apply_local under shard_map):
+    a MoE engine at tp=2 is token-identical to single-device through a
+    vectorized eager-CoW fan-out."""
+    run_in_subprocess("""
+        import dataclasses, jax
+        from repro.configs import get_config, reduced
+        from repro.models.model import Model
+        from repro.runtime.serve_loop import ServeEngine
+
+        cfg = dataclasses.replace(
+            reduced(get_config("qwen3-moe-235b-a22b"), d_model=64),
+            dtype="float32", num_experts=4, experts_per_token=2,
+            num_kv_heads=2, moe_capacity_factor=8.0)
+        model = Model(cfg, attn_chunk=8, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def cycle(tp):
+            eng = ServeEngine(model, params, num_pages=64, page_size=4,
+                              max_pages_per_seq=16, tp=tp)
+            sid = eng.add_request([1, 2, 3, 4, 5])
+            toks = [eng.decode([sid]) for _ in range(2)]
+            kids = eng.fork(sid, 3, eager_cow=True)   # one fused CoW
+            toks.append(eng.decode(kids))
+            return toks, eng.cow_dispatches, eng.cow_faults
+
+        assert cycle(None) == cycle(2)
+    """, n_devices=2)
+
+
+def test_tp_session_sampled_exploration_matches_single_device():
+    """The full api stack (BranchSession -> Scheduler -> sharded engine)
+    with temperature sampling: same prompts, same seed, tp=2 produces
+    the same tokens as tp=1 through a vectorized branch() (eager fused
+    CoW under shard_map), wait, score, first-commit-wins cycle."""
+    run_in_subprocess("""
+        import dataclasses, jax
+        from repro.api import BranchSession
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.runtime.serve_loop import ServeEngine
+
+        cfg = dataclasses.replace(get_config("paper-agentic"),
+                                  dtype="float32", num_layers=2)
+        model = Model(cfg, attn_chunk=8, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def cycle(tp):
+            eng = ServeEngine(model, params, num_pages=64, page_size=4,
+                              max_pages_per_seq=16, tp=tp)
+            session = BranchSession(eng, max_batch=8, seed=7)
+            root = session.open([1, 2, 3, 4, 5], max_new_tokens=12)
+            kids = session.branch(root, n=3)    # one fused CoW dispatch
+            for hd in kids:
+                session.resume(hd, greedy=False, temperature=2.0)
+            session.wait(kids, produced=4)
+            tails = [tuple(session.tokens(hd)) for hd in kids]
+            session.commit(kids[1])
+            out = session.finish(root)
+            return tails, out, eng.cow_dispatches, session.tp
+
+        one = cycle(1)
+        two = cycle(2)
+        assert one[3] == 1 and two[3] == 2
+        assert one[:3] == two[:3], (one, two)
+    """, n_devices=2)
+
+
+def test_tp_engine_rejects_nondividing_mesh():
+    run_in_subprocess("""
+        import dataclasses, jax, pytest
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.runtime.serve_loop import ServeEngine
+
+        cfg = dataclasses.replace(get_config("paper-agentic"),
+                                  dtype="float32", num_layers=2,
+                                  num_heads=6, num_kv_heads=3,
+                                  head_dim=32)
+        model = Model(cfg, attn_chunk=8, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="num_kv_heads"):
+            ServeEngine(model, params, num_pages=16, page_size=4, tp=2)
+    """, n_devices=2)
 
 
 def test_sanitize_drops_nondividing_axes():

@@ -86,11 +86,28 @@ def test_abort_frees_all_domains(rt):
 
 
 def test_multiplexed_syscall_style(rt):
+    """The Listing-1 sequence through the direct verbs (the opcode
+    dispatcher is a deprecated shim — see the warning test below)."""
     runtime, root, kv = rt
-    handles = runtime(BR_CREATE, parent=root, n_branches=2)
+    handles = runtime.create(root, n_branches=2)
     handles[0].state.write("workspace/file", b"via-op")
-    runtime(BR_COMMIT, handle=handles[0])
+    runtime.commit(handles[0])
     assert root.read("workspace/file") == b"via-op"
+
+
+def test_opcode_dispatch_shim_warns_but_works(rt):
+    """BranchRuntime(op, ...) stays functional for old callers but must
+    emit a DeprecationWarning pointing at repro.api.BranchSession."""
+    runtime, root, kv = rt
+    with pytest.warns(DeprecationWarning, match="BranchSession"):
+        handles = runtime(BR_CREATE, parent=root, n_branches=2)
+    handles[1].state.write("workspace/file", b"via-shim")
+    with pytest.warns(DeprecationWarning):
+        runtime(BR_COMMIT, handle=handles[1])
+    assert root.read("workspace/file") == b"via-shim"
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            runtime(99)
 
 
 def test_br_state_required(rt):
