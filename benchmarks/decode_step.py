@@ -1,0 +1,156 @@
+"""Decode fast path: dispatches/step, step latency, int8 fan-out.
+
+The PR-6 tentpole measured end to end:
+
+* ``*_us_per_step``     — one batched decode step, legacy two-dispatch
+  ``ref`` vs the fused one-dispatch path (``fused_ref`` on CPU — same
+  routing the Pallas kernel uses on TPU), under a fork-heavy workload
+  where every step carries CoW faults.
+* ``*_dispatches_per_step`` — device dispatches a CoW-carrying step
+  costs (the 2 -> 1 headline: the fused step needs no ``_copy_pages``).
+* ``fanout_*``          — branches a fixed-byte pool can hold: int8
+  pages store 4x the pages of the fp32 test dtype (2x vs bf16) at equal
+  bytes, so the same HBM admits a deeper agentic fan-out.
+* ``qwen2_parity``      — greedy tokens on a reduced qwen2 config
+  (qkv_bias, GQA 4:1) identical across ref / fused / int8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import List, Tuple
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import reduced
+from repro.models.model import Model
+from repro.runtime.serve_loop import ServeEngine
+
+_SETUP = {}
+
+
+def _model(name="paper-agentic"):
+    if name not in _SETUP:
+        cfg = dataclasses.replace(get_config(name), dtype="float32")
+        if name != "paper-agentic":
+            cfg = dataclasses.replace(reduced(cfg), dtype="float32")
+        model = Model(cfg, attn_chunk=8, remat=False)
+        params = model.init(jax.random.PRNGKey(0))
+        _SETUP[name] = (model, params)
+    return _SETUP[name]
+
+
+def _engine(name="paper-agentic", **kw):
+    model, params = _model(name)
+    kw.setdefault("num_pages", 512)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_pages_per_seq", 32)
+    return ServeEngine(model, params, **kw)
+
+
+def _cow_workload(eng, steps=12):
+    """Fork-heavy decode: every step opens with fresh CoW faults.
+
+    Returns (median us/step, device dispatches per step) where
+    dispatches = 1 (the jitted step) + any separate _copy_pages calls.
+    """
+    root = eng.add_request(list(range(2, 15)))   # partial tail page
+    eng.decode([root])
+    samples = []
+    d0, steps_run = eng.cow_dispatches, 0
+    kids: List[int] = []
+    for _ in range(steps):
+        kids = eng.fork(root, 2)     # shared partial tail -> CoW faults
+        t0 = time.perf_counter()
+        eng.decode(kids)             # the measured step (faults + token)
+        samples.append((time.perf_counter() - t0) * 1e6)
+        steps_run += 1
+        for k in kids:
+            eng.abort(k)
+            eng.kv.tree.reap(k)
+    copy_dispatches = (eng.cow_dispatches - d0) / steps_run
+    assert eng.cow_faults > 0, "workload produced no CoW faults"
+    return statistics.median(samples[2:]), 1 + copy_dispatches
+
+
+def _max_fanout(eng) -> int:
+    """Branches a pool admits: fork 1 child at a time, decode it one
+    step (forcing its tail CoW page allocation), until -ENOSPC."""
+    root = eng.add_request(list(range(2, 15)))
+    eng.decode([root])
+    n = 0
+    origin = root
+    try:
+        while True:
+            (kid,) = eng.fork(origin, 1)
+            eng.decode([kid])        # materialize the CoW'd tail page
+            n += 1
+    except MemoryError:
+        return n
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+
+    ref_us, ref_disp = _cow_workload(_engine(attn_impl="ref"))
+    fus_us, fus_disp = _cow_workload(_engine(attn_impl="fused_ref"))
+    rows.append(("ref_us_per_step", ref_us, "legacy_two_dispatch"))
+    rows.append(("fused_us_per_step", fus_us, "cow_rides_the_step"))
+    rows.append(("ref_dispatches_per_step", ref_disp, "step+_copy_pages"))
+    rows.append(("fused_dispatches_per_step", fus_disp, "target_1"))
+    rows.append(("fused_step_speedup", ref_us / fus_us, "ref/fused"))
+
+    # tokens/s of plain batched decode (no forking), both paths
+    for impl in ("ref", "fused_ref"):
+        eng = _engine(attn_impl=impl)
+        seqs = [eng.add_request(list(range(2, 12))) for _ in range(8)]
+        for _ in range(2):
+            eng.decode(seqs)         # warm the compile cache
+        t0 = time.perf_counter()
+        n_steps = 16
+        for _ in range(n_steps):
+            eng.decode(seqs)
+        dt = time.perf_counter() - t0
+        rows.append((f"{impl}_decode_tokens_per_s",
+                     len(seqs) * n_steps / dt, "batch8_greedy"))
+
+    # fan-out at equal pool bytes: fp32 pages vs int8 pages (+scales).
+    # fp32 -> int8 is 4 bytes -> 1 byte per element, so the same byte
+    # budget holds 4x the pages (2x for a bf16 deployment dtype).
+    base_pages = 48
+    fp = _engine(num_pages=base_pages, max_pages_per_seq=8)
+    q8 = _engine(num_pages=base_pages * 4, max_pages_per_seq=8,
+                 kv_dtype="int8")
+    fan_fp = _max_fanout(fp)
+    fan_q8 = _max_fanout(q8)
+    rows.append(("fanout_fp32_pool", float(fan_fp),
+                 f"{base_pages}pages"))
+    rows.append(("fanout_int8_equal_bytes", float(fan_q8),
+                 f"{base_pages * 4}pages_same_bytes"))
+    rows.append(("fanout_int8_gain", fan_q8 / max(fan_fp, 1),
+                 "target>=2x_vs_bf16"))
+
+    # greedy parity on a reduced qwen2 (qkv_bias=True, GQA) config
+    toks = {}
+    for label, kw in (("ref", dict(attn_impl="ref")),
+                      ("fused", dict(attn_impl="fused_ref")),
+                      ("int8", dict(kv_dtype="int8"))):
+        eng = _engine("qwen2-1.5b", **kw)
+        sid = eng.add_request(list(range(3, 16)))
+        out = [eng.decode([sid])[0] for _ in range(8)]
+        kids = eng.fork(sid, 2)
+        out += eng.decode(kids)
+        toks[label] = out
+    parity = (toks["ref"] == toks["fused"] == toks["int8"])
+    rows.append(("qwen2_parity", float(parity),
+                 "greedy_ref==fused==int8"))
+    assert parity, f"greedy divergence on qwen2: {toks}"
+    return rows
+
+
+if __name__ == "__main__":
+    for name, value, derived in run():
+        print(f"{name},{value:.3f},{derived}")

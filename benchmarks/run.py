@@ -12,6 +12,13 @@ so the perf trajectory is tracked across PRs.  Tables:
   sharded (tp) serving    -> shard_serve
   in-program exploration  -> explore_bench
   exploration policies    -> explore_policies
+  decode fast path        -> decode_step
+  fused spec verify       -> spec_verify
+
+``--compare <baseline.json>`` checks the run against a committed
+baseline and fails on a >20% drop of any throughput-like row
+(``*_per_s``, ``*speedup*``, ``*gain*``); latency rows only warn —
+shared CI machines make microsecond medians too noisy to gate on.
 """
 
 from __future__ import annotations
@@ -24,6 +31,38 @@ import sys
 import time
 import traceback
 from pathlib import Path
+
+
+def compare(baseline_path: Path, records: list) -> list:
+    """Regression check vs a committed baseline JSON.
+
+    Throughput-like rows (``*_per_s``, ``*speedup*``, ``*gain*``) fail
+    on a >20% drop; ``*_us*`` latency rows print a warning only (CI
+    wall-clock noise); everything else is informational.  Returns the
+    list of failure strings.
+    """
+    base = json.loads(Path(baseline_path).read_text())
+    base_rows = {(r["module"], r["name"]): r["value"]
+                 for r in base.get("rows", [])}
+    failures = []
+    for r in records:
+        key = (r["module"], r["name"])
+        name = r["name"]
+        if name.startswith("_") or key not in base_rows:
+            continue
+        old, new = base_rows[key], r["value"]
+        if old <= 0:
+            continue
+        label = f"{key[0]}.{name}: {old:.3f} -> {new:.3f}"
+        # suffix match: "us_per_step" latency rows contain "per_s"
+        if (name.endswith("per_s") or "speedup" in name
+                or "gain" in name):
+            if new < 0.8 * old:
+                failures.append(f"throughput regression {label} "
+                                f"({new / old - 1:+.0%})")
+        elif "_us" in name and new > 1.5 * old:
+            print(f"warning: latency grew {label}", file=sys.stderr)
+    return failures
 
 
 def _git_rev() -> str:
@@ -42,17 +81,22 @@ def main(argv=None) -> None:
                          "BENCH_<timestamp>.json in the cwd)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names to run")
+    ap.add_argument("--compare", default=None,
+                    help="baseline BENCH_*.json to regression-check "
+                         "against (fail on >20%% throughput drop)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
         branch_create,
         commit_abort,
+        decode_step,
         explore_bench,
         explore_policies,
         fork_fanout,
         kvbranch_bench,
         serve_throughput,
         shard_serve,
+        spec_verify,
         throughput,
     )
 
@@ -66,6 +110,8 @@ def main(argv=None) -> None:
         ("shard_serve", shard_serve),
         ("explore_bench", explore_bench),
         ("explore_policies", explore_policies),
+        ("decode_step", decode_step),
+        ("spec_verify", spec_verify),
     ]
     if args.only:
         keep = set(args.only.split(","))
@@ -103,6 +149,12 @@ def main(argv=None) -> None:
         "rows": records,
     }, indent=2))
     print(f"wrote {out}")
+    if args.compare:
+        regressions = compare(Path(args.compare), records)
+        for line in regressions:
+            print(line, file=sys.stderr)
+        if regressions:
+            failed.append(f"compare:{args.compare}")
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

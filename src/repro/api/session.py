@@ -431,6 +431,30 @@ class BranchSession:
                 errno=Errno.EPERM)
         self.engine.truncate(entry.seq, entry.fork_len + n_generated)
 
+    def verify(self, hd: int,
+               drafts: Sequence[Sequence[int]]) -> List[List[int]]:
+        """Score draft continuations of this branch in ONE fused device
+        dispatch (the speculative-verify fast path).
+
+        Each draft is k proposed next tokens; the returned row is the
+        target's greedy token at every draft position (teacher-forced),
+        so ``lcp(draft, row)`` is exactly what a sequential greedy
+        verifier branch would have accepted — k decode dispatches
+        collapsed into one, with no KV writes and no new branches.
+        Works on a frozen fork origin (the usual caller: a policy whose
+        drafts are live children of ``hd``).
+        """
+        entry = self._entry(hd)
+        self._refresh(entry)
+        if entry.resolved is not None:
+            raise BranchStateError(
+                f"handle {hd:#x} is resolved ({entry.resolved})")
+        if entry.seq is None or not self.sched.is_tracked(entry.seq):
+            raise BranchStateError(
+                f"handle {hd:#x} is not schedulable; nothing to verify "
+                "against")
+        return self.sched.verify(entry.seq, drafts)
+
     # ------------------------------------------------------------------
     # eventing: poll / wait
     # ------------------------------------------------------------------

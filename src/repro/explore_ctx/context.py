@@ -185,6 +185,18 @@ class BranchContext:
         """
         self.session.truncate(self.hd, n_generated)
 
+    def verify(self, drafts: List[List[int]]) -> List[List[int]]:
+        """Fused speculative verify against this branch (one dispatch).
+
+        Each draft is k proposed next tokens; each returned row is the
+        target's greedy continuation at every draft position, so
+        ``lcp_len(draft, row)`` is the draft's verified-prefix length.
+        Pure scoring — no decode, no new branches, this context's KV is
+        read-only.  The usual caller holds the frozen origin while the
+        drafts are its live children.
+        """
+        return self.session.verify(self.hd, drafts)
+
     # -- context manager ------------------------------------------------
     def __enter__(self) -> "BranchContext":
         return self

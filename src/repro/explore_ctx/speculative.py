@@ -2,15 +2,18 @@
 
 Two faces of the same fork/explore/commit pattern:
 
-* :func:`speculative_decode` — the serving policy.  One fork group holds
-  a greedy **verifier** branch (the target's own continuation) and N
-  sampled **draft** branches.  After decoding, each draft is verified by
-  longest-common-prefix against the verifier; the winning draft is
-  truncated to its verified prefix and committed (KV pages + token tail
-  shrink together), or the verifier commits when nothing verified.  In a
-  deployment the drafts come from a cheaper model and the verifier pass
-  is one batched forward; here both share the engine, so the policy
-  demonstrates lifecycle + truncation semantics, not a speedup.
+* :func:`speculative_decode` — the serving policy.  N sampled **draft**
+  branches decode ``k`` tokens each; then ONE fused ``verify`` dispatch
+  against the frozen origin (``ServeEngine.spec_verify``) teacher-forces
+  every draft row through the target in a single pass, yielding the
+  target's greedy token at every draft position — what previously took
+  a dedicated verifier branch decoding ``k`` sequential steps.  The
+  winning draft is truncated to its verified prefix and committed (KV
+  pages + token tail shrink together); when nothing verified, a held
+  fallback branch takes one true greedy step and commits, so the policy
+  always makes progress.  In a deployment the drafts come from a
+  cheaper model; here both share the engine, so the policy demonstrates
+  the lifecycle + the one-dispatch verify, not an end-to-end speedup.
 * :class:`SpeculativeTrainer` — the training port
   (``examples/speculative_train.py``).  Every step forks K candidate
   update branches *inside one jitted program* (stacked leading axis —
@@ -36,11 +39,18 @@ from repro.explore_ctx.scoring import lcp_len
 def speculative_decode(ctx: BranchContext, *, n_drafts: int = 3,
                        draft_tokens: int = 8,
                        temperature: float = 1.5) -> Generator:
-    """Draft/verify/commit-the-longest-verified-prefix, as a policy.
+    """Draft / fused-verify / commit-the-longest-verified-prefix.
 
     The fork declares its children ``BR_SPECULATIVE`` — the flag that
     licenses ``truncate`` (rewriting a draft down to its verified
     prefix); an undeclared branch attempting the same gets ``-EPERM``.
+
+    The verify phase is ONE device dispatch: ``ctx.verify`` scores all
+    draft rows against the frozen origin in a single fused pass
+    (``ServeEngine.spec_verify``), instead of a verifier branch decoding
+    ``draft_tokens`` sequential greedy steps.  Child 0 of the fork group
+    is a parked **fallback** branch that only decodes (one true greedy
+    step, then commits) when every draft diverges at its first token.
     """
     try:
         kids = yield Fork(ctx, n_drafts + 1, flags=BR_SPECULATIVE)
@@ -51,31 +61,40 @@ def speculative_decode(ctx: BranchContext, *, n_drafts: int = 3,
         return policy_result(ctx, committed=False,
                              policy="speculative_decode", degraded=True,
                              drafts=0, accepted=0)
-    verifier, drafts = kids[0], list(kids[1:])
-    # ONE wait, one continuous batch: the greedy verifier lane decodes
-    # alongside the sampled drafts (per-sequence sampling rows)
-    yield Decode(kids, draft_tokens,
-                 greedy=[True] + [False] * len(drafts),
-                 temperature=[1.0] + [temperature] * len(drafts))
-    target = verifier.generated()
-    verified = [lcp_len(d.generated(), target) for d in drafts]
+    fallback_br, drafts = kids[0], list(kids[1:])
+    # ONE wait, one continuous batch of sampled draft lanes — no greedy
+    # verifier lane decodes alongside them anymore
+    yield Decode(drafts, draft_tokens, greedy=False,
+                 temperature=temperature)
+    rows = [d.generated() for d in drafts]
+    # a draft may stop short of draft_tokens (decode budget); the fused
+    # verify wants equal-length rows, so score the common length
+    t = min(len(r) for r in rows)
+    if t > 0:
+        target_rows = ctx.verify([r[:t] for r in rows])   # ONE dispatch
+        verified = [lcp_len(r[:t], tr) for r, tr in zip(rows, target_rows)]
+    else:
+        verified = [0] * len(drafts)
     best = max(range(len(drafts)), key=lambda i: verified[i])
     accepted = verified[best]
     fallback = accepted == 0
     if fallback:
-        winner = verifier                # every draft diverged at once:
-    else:                                # the target's own tokens commit
+        # every draft diverged at its first token: the parked fallback
+        # branch takes one true greedy step so the commit makes progress
+        yield Decode([fallback_br], 1, greedy=True)
+        winner = fallback_br
+    else:
         winner = drafts[best]
         if accepted < len(winner.generated()):
             winner.truncate(accepted)    # keep only the verified prefix
     winner.commit()
-    # 'accepted' counts only draft tokens that verified — a verifier
-    # fallback is an honest 0% acceptance, not a perfect run
+    # 'accepted' counts only draft tokens that verified — a fallback
+    # commit is an honest 0% acceptance, not a perfect run
     return policy_result(
         ctx, score=float(accepted),
         policy="speculative_decode", drafts=n_drafts,
         draft_tokens=draft_tokens, accepted=accepted, fallback=fallback,
-        verified_per_draft=verified,
+        verified_per_draft=verified, verify_dispatches=1 if t else 0,
         acceptance_rate=accepted / max(draft_tokens, 1))
 
 

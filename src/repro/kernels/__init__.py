@@ -7,7 +7,9 @@ interpret mode against the oracles by ``tests/kernels/``.
 """
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+    paged_chunk_attention)
 from repro.kernels.ssd_scan import ssd_scan
 
-__all__ = ["flash_attention", "paged_attention", "ssd_scan"]
+__all__ = ["flash_attention", "paged_attention",
+           "paged_chunk_attention", "ssd_scan"]

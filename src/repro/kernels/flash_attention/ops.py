@@ -15,6 +15,7 @@ import jax
 
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.select import resolve_impl
 from repro.models.layers import chunked_causal_attention
 
 
@@ -45,6 +46,4 @@ _flash.defvjp(_fwd, _bwd)
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     *, impl: str = "auto") -> jax.Array:
     """Causal GQA attention.  q: [b,s,h,hd]; k,v: [b,s,kv,hd]."""
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "chunked"
-    return _flash(q, k, v, impl)
+    return _flash(q, k, v, resolve_impl(impl, cpu_fallback="chunked"))

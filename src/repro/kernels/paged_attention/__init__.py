@@ -1,3 +1,6 @@
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import (
+    paged_attention,
+    paged_chunk_attention,
+)
 
-__all__ = ["paged_attention"]
+__all__ = ["paged_attention", "paged_chunk_attention"]

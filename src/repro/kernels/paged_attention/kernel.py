@@ -19,6 +19,21 @@ TPU adaptation notes (vs. a GPU paged-attention port):
 
 Grid: (batch, kv_heads, pages).  The page axis is innermost so the
 accumulators for one (seq, head) stay resident until finalized.
+
+Two kernels live here:
+
+* :func:`paged_attention_kernel` — the original cached-only decode
+  gather (KV for the current token must already be in the pool).
+* :func:`paged_chunk_attention_kernel` — the **CoW-aware fused** decode/
+  verify kernel (DESIGN §12).  It additionally takes (a) the current
+  chunk's K/V *inline* (``t`` freshly projected tokens that are NOT in
+  the pool yet — ``t=1`` is plain decode, ``t=k`` is speculative
+  verify), (b) a per-step **page indirection vector** ``page_map`` so a
+  pending lazy-CoW fault's destination page is redirected to its still-
+  valid source *inside the attention gather* (no materialized page copy
+  on the attention path), and (c) optional per-page/per-kv-head int8
+  dequant scales.  The in-chunk part is causal: query ``i`` of the
+  chunk sees cached positions plus chunk keys ``0..i``.
 """
 
 from __future__ import annotations
@@ -142,3 +157,185 @@ def paged_attention_kernel(
     )
     return kernel(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
                   q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# fused CoW-aware chunk kernel (decode t=1 / speculative verify t=k)
+# ---------------------------------------------------------------------------
+
+def _chunk_kernel(
+    # scalar prefetch
+    block_tables_ref,   # [b, max_pages] int32 (SMEM)
+    lengths_ref,        # [b] int32 (SMEM) — cached length, chunk excluded
+    page_map_ref,       # [n_pages] int32 (SMEM) — CoW dst -> src redirect
+    # inputs
+    q_ref,              # [1, 1, t*g, hd]
+    kn_ref,             # [1, t, 1, hd]   chunk K (inline, not in the pool)
+    vn_ref,             # [1, t, 1, hd]
+    k_ref,              # [1, page, 1, hd] (int8 when quantized)
+    v_ref,              # [1, page, 1, hd]
+    *rest,              # [ks_ref, vs_ref,] o_ref, m_ref, l_ref, acc_ref
+    page_size: int,
+    scale: float,
+    t: int,
+    g: int,
+    quantized: bool,
+):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [t*g, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [page, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, 0]
+        v = v * vs_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                        # [t*g, page]
+
+    pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (1, page_size), 1)
+    valid = pos < lengths_ref[b]                     # [1, page]
+    s = jnp.where(valid, s, NEG_BIG)
+
+    m_prev = m_ref[...]                              # [t*g, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        # in-chunk causal attention: query row r belongs to chunk token
+        # r // g and may see chunk keys 0..r//g (its own key included —
+        # the classic decode "attend to yourself" position)
+        kn = kn_ref[0, :, 0, :].astype(jnp.float32)  # [t, hd]
+        vn = vn_ref[0, :, 0, :].astype(jnp.float32)
+        sn = jax.lax.dot_general(
+            q, kn, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                    # [t*g, t]
+        q_tok = jax.lax.broadcasted_iota(jnp.int32, (t * g, t), 0) // g
+        k_tok = jax.lax.broadcasted_iota(jnp.int32, (t * g, t), 1)
+        causal = k_tok <= q_tok
+        sn = jnp.where(causal, sn, NEG_BIG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sn, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sn - m_new)
+        p = jnp.where(causal, p, 0.0)
+        l = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, vn, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        l = jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = (acc / l).astype(o_ref.dtype)
+
+
+def paged_chunk_attention_kernel(
+    q: jax.Array,            # [b, t, kv, g, hd]
+    k_new: jax.Array,        # [b, t, kv, hd] — the chunk's K, inline
+    v_new: jax.Array,
+    k_pages: jax.Array,      # [n_pages, page, kv, hd] (int8 if quantized)
+    v_pages: jax.Array,
+    block_tables: jax.Array, # [b, max_pages] int32
+    lengths: jax.Array,      # [b] int32 — cached length (chunk excluded)
+    page_map: jax.Array,     # [n_pages] int32 — identity except CoW dst->src
+    k_scales: jax.Array = None,  # [n_pages, kv] f32 (int8 mode)
+    v_scales: jax.Array = None,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused CoW-aware decode/verify attention.  Returns [b, t, kv, g, hd].
+
+    Cached positions are gathered through ``page_map`` (so a pending CoW
+    fault's redirect resolves in-kernel against the pre-copy pool), the
+    ``t`` chunk tokens attend causally among themselves via the inline
+    ``k_new``/``v_new`` (their KV need not be in the pool), and int8
+    pools are dequantized per page/kv-head in VMEM.
+    """
+    b, t, kv, g, hd = q.shape
+    page = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    quantized = k_scales is not None
+
+    # the page walk treats the (t, g) query block as one t*g query set —
+    # every chunk token sees the same cached positions
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(b, kv, t * g, hd)
+
+    grid = (b, kv, max_pages)
+
+    def q_map(b_, h_, i_, bt, ln, pm):
+        return (b_, h_, 0, 0)
+
+    def chunk_map(b_, h_, i_, bt, ln, pm):
+        return (b_, 0, h_, 0)
+
+    def kv_map(b_, h_, i_, bt, ln, pm):
+        return (pm[bt[b_, i_]], 0, h_, 0)
+
+    def scale_map(b_, h_, i_, bt, ln, pm):
+        return (pm[bt[b_, i_]], h_)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, t * g, hd), q_map),
+        pl.BlockSpec((1, t, 1, hd), chunk_map),
+        pl.BlockSpec((1, t, 1, hd), chunk_map),
+        pl.BlockSpec((1, page, 1, hd), kv_map),
+        pl.BlockSpec((1, page, 1, hd), kv_map),
+    ]
+    args = [qf, k_new, v_new, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), scale_map),
+                     pl.BlockSpec((1, 1), scale_map)]
+        args += [k_scales, v_scales]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, t * g, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, hd), jnp.float32),
+        ],
+    )
+
+    kernel = pl.pallas_call(
+        functools.partial(_chunk_kernel, page_size=page, scale=scale,
+                          t=t, g=g, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, t * g, hd), q.dtype),
+        interpret=interpret,
+    )
+    out = kernel(block_tables.astype(jnp.int32),
+                 lengths.astype(jnp.int32),
+                 page_map.astype(jnp.int32), *args)
+    return out.reshape(b, kv, t, g, hd).transpose(0, 2, 1, 3, 4)

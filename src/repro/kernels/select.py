@@ -1,0 +1,46 @@
+"""Backend selection shared by every ``kernels/*/ops.py`` wrapper.
+
+``impl="auto"`` resolves once per call site:
+
+* on TPU the compiled Pallas kernel runs;
+* off-TPU the default is the jnp reference (``ref``/``chunked``) — the
+  kernels' math oracle — **unless** ``REPRO_KERNELS_INTERPRET=1`` is
+  set, in which case the *Pallas kernel code itself* executes in
+  interpret mode.  CPU CI exports the flag so the kernel bodies (index
+  maps, scalar prefetch, online-softmax scratch) are exercised on every
+  run instead of silently falling back to the oracle everywhere.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+INTERPRET_ENV = "REPRO_KERNELS_INTERPRET"
+
+
+def interpret_requested() -> bool:
+    """Whether the environment asks for interpret-mode Pallas off-TPU."""
+    return os.environ.get(INTERPRET_ENV, "").strip().lower() in _TRUTHY
+
+
+def resolve_impl(impl: str, *, cpu_fallback: str = "ref") -> str:
+    """Resolve ``"auto"`` to a concrete backend name.
+
+    Non-``auto`` values pass through untouched, so explicit requests
+    (tests pinning ``interpret``, benchmarks pinning ``ref``) always
+    win over the environment.
+    """
+    if impl != "auto":
+        return impl
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    if interpret_requested():
+        return "interpret"
+    return cpu_fallback
+
+
+__all__ = ["INTERPRET_ENV", "interpret_requested", "resolve_impl"]

@@ -7,6 +7,7 @@ from typing import Tuple
 
 import jax
 
+from repro.kernels.select import resolve_impl
 from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
@@ -16,8 +17,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
              C: jax.Array, *, chunk: int = 128, impl: str = "auto",
              ) -> Tuple[jax.Array, jax.Array]:
     """Mamba2 SSD scan.  Returns (y [b,s,H,P], final_state [b,H,N,P])."""
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    impl = resolve_impl(impl)
     if impl == "pallas":
         return ssd_scan_kernel(x, dt, A, B, C, chunk=chunk)
     if impl == "interpret":

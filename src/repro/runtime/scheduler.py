@@ -248,6 +248,18 @@ class Scheduler:
             raise BranchError(f"sequence {seq} is not scheduled here")
         self._sampling[seq] = (bool(greedy), float(temperature))
 
+    def verify(self, seq: int,
+               drafts: Sequence[Sequence[int]]) -> List[List[int]]:
+        """Fused speculative verify on a tracked sequence.
+
+        Pure scoring — one device dispatch for all drafts × k positions,
+        no KV writes, no ledger movement (the sequence's reservation and
+        hold state are untouched).  See ``ServeEngine.spec_verify``.
+        """
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        return self.engine.spec_verify(seq, drafts)
+
     def produced(self, seq: int) -> int:
         """Tokens generated beyond the owning request's prompt."""
         req = self._requests[self._seq_owner[seq]]

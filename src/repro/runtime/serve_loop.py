@@ -14,6 +14,24 @@ The paper's serving workload as a first-class engine feature:
 * nesting: branches fork sub-branches (Tree-of-Thoughts style).
 * decode runs the **paged-attention** path per layer (Pallas kernel on
   TPU; the jnp gather oracle on CPU — same math).
+* the **decode fast path** (DESIGN §12): with any ``attn_impl`` other
+  than ``"ref"`` the whole step — pending CoW fault service, the
+  token's KV write, and attention — is ONE device dispatch: the fused
+  :func:`~repro.kernels.paged_attention.paged_chunk_attention` kernel
+  takes the step's CoW indirection vector and the fresh K/V inline, so
+  the attention gather resolves page redirects against the *pre-copy*
+  pool while the physical copy and slot write ride the same program.
+  ``attn_impl="ref"`` keeps the legacy two-dispatch path
+  (``_copy_pages`` then the cached-only gather) as the oracle.
+* **int8 KV pages** (``kv_dtype="int8"``): pools store int8 with
+  per-page/per-kv-head dequant scales alongside — half the HBM of
+  bf16, double the branch fan-out at equal pool bytes.  Dequant happens
+  inside the kernel; every CoW page copy moves the page's scales with
+  it.  Requires the fused path (the legacy gather is fp-only).
+* ``spec_verify(seq, drafts)`` scores k draft tokens against the target
+  in ONE fused pass over a shared block table — the verify phase of
+  ``speculative_decode`` costs one dispatch instead of k sequential
+  verifier decode steps.
 
 The engine does not implement a branch lifecycle of its own: its host
 token tails are a :class:`TokenDomain` attached to the KV manager's
@@ -55,7 +73,11 @@ from repro.core import KVBranchManager
 from repro.distributed.compat import shard_map
 from repro.distributed.mesh import ParallelPlan, serving_mesh, serving_plan
 from repro.distributed.sharding import kv_page_spec, serve_param_specs
-from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ops import (
+    paged_attention,
+    paged_chunk_attention,
+)
+from repro.kernels.select import resolve_impl
 from repro.models import layers as L
 from repro.models.model import Model
 from repro.models.transformer import embed_tokens, lm_head
@@ -65,6 +87,32 @@ from repro.models.transformer import embed_tokens, lm_head
 # paged decode step (dense/moe families) — one body, two bindings:
 # the single-device jit and the shard_map'd tensor-parallel step
 # ---------------------------------------------------------------------------
+
+def _ffn(cfg: ArchConfig, lp: Any, x: jax.Array, combine,
+         axis_name: Optional[str]) -> jax.Array:
+    """Post-attention FFN of one layer, shared by every step body.
+
+    ``x`` is the ln2-normed hidden [b, s, d]; returns the residual
+    delta.  Under ``axis_name`` the MoE branch runs its expert-parallel
+    slice and the EP combine is the same psum a TP MLP needs (DESIGN §5).
+    """
+    if cfg.is_moe:
+        from repro.models.moe import moe_apply_local, moe_block
+
+        if axis_name is None:
+            m, _ = moe_block(cfg, lp["moe"], x)
+        else:
+            mp = lp["moe"]
+            e_loc = mp["wu"].shape[0]
+            e0 = (jax.lax.axis_index(axis_name) * e_loc).astype(jnp.int32)
+            y, _ = moe_apply_local(
+                cfg, x.reshape(-1, cfg.d_model), mp["router"],
+                mp.get("wg"), mp["wu"], mp["wd"], e0)
+            m = combine(y).reshape(x.shape)
+    else:
+        m = combine(L.mlp_block(cfg, lp["mlp"], x))
+    return m
+
 
 def _decode_body(
     cfg: ArchConfig,
@@ -115,25 +163,7 @@ def _decode_body(
         a = a.reshape(b, 1, kvh * g, cfg.head_dim)
         h = h + combine(jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"]))
         x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
-        if cfg.is_moe:
-            from repro.models.moe import moe_apply_local, moe_block
-
-            if axis_name is None:
-                m, _ = moe_block(cfg, lp["moe"], x)
-            else:
-                # expert-parallel slice of the MoE FFN; the EP combine
-                # is the same psum a TP MLP needs (DESIGN §5)
-                mp = lp["moe"]
-                e_loc = mp["wu"].shape[0]
-                e0 = (jax.lax.axis_index(axis_name) * e_loc).astype(
-                    jnp.int32)
-                y, _ = moe_apply_local(
-                    cfg, x.reshape(-1, cfg.d_model), mp["router"],
-                    mp.get("wg"), mp["wu"], mp["wd"], e0)
-                m = combine(y).reshape(b, 1, cfg.d_model)
-        else:
-            m = combine(L.mlp_block(cfg, lp["mlp"], x))
-        return h + m, (kp, vp)
+        return h + _ffn(cfg, lp, x, combine, axis_name), (kp, vp)
 
     h, (k_pages, v_pages) = jax.lax.scan(
         body, h, (params["layers"], k_pages, v_pages))
@@ -209,6 +239,321 @@ def build_tp_decode_step(cfg: ArchConfig, plan: ParallelPlan, params: Any,
     return jax.jit(fn)
 
 
+# ---------------------------------------------------------------------------
+# fused decode fast path + speculative verify (DESIGN §12)
+# ---------------------------------------------------------------------------
+
+def _quant_token_write(pages: jax.Array,    # [n_pages, page, kv, hd] int8
+                       scales: jax.Array,   # [n_pages, kv] f32
+                       slot_pages: jax.Array,    # [b]
+                       slot_offsets: jax.Array,  # [b]
+                       tok: jax.Array):          # [b, kv, hd] fp
+    """Write one fp K/V row per sequence into its int8 slot page.
+
+    Dequant the page, set the row, requant with a **monotone** scale:
+    ``new = max(old, amax|tok|/127)``.  Requant under an unchanged scale
+    is lossless (``round(q·s/s) = q``), so earlier entries drift only at
+    the rare growth events.  A write at offset 0 starts a fresh page, so
+    the stale occupant's scale is discarded rather than inherited.
+    """
+    b = tok.shape[0]
+    sc = jnp.where(slot_offsets[:, None] == 0, 0.0,
+                   scales[slot_pages])                     # [b, kv]
+    fp = pages[slot_pages].astype(jnp.float32) * sc[:, None, :, None]
+    fp = fp.at[jnp.arange(b), slot_offsets].set(tok.astype(jnp.float32))
+    need = jnp.max(jnp.abs(tok.astype(jnp.float32)), axis=-1) / 127.0
+    nsc = jnp.maximum(jnp.maximum(sc, need), 1e-8)
+    q8 = jnp.clip(jnp.round(fp / nsc[:, None, :, None]),
+                  -127, 127).astype(jnp.int8)
+    return pages.at[slot_pages].set(q8), scales.at[slot_pages].set(nsc)
+
+
+def _fused_decode_body(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,       # [L, n_pages, page, kv(_local), hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [b, max_pages]
+    lengths: jax.Array,       # [b] length BEFORE this token
+    slot_pages: jax.Array,    # [b]
+    slot_offsets: jax.Array,  # [b]
+    tokens: jax.Array,        # [b, 1]
+    cow_src: jax.Array,       # [n_cow] int32 (may be length 0)
+    cow_dst: jax.Array,       # [n_cow] int32
+    k_scales: Optional[jax.Array] = None,  # [L, n_pages, kv] (int8 mode)
+    v_scales: Optional[jax.Array] = None,
+    *,
+    impl: str,
+    axis_name: Optional[str] = None,
+):
+    """One decode step, CoW fault service included — ONE device dispatch.
+
+    The step's pending CoW faults arrive as an (src, dst) indirection
+    vector instead of a prior ``_copy_pages`` dispatch.  Attention reads
+    the **pre-copy** pool through ``page_map`` (a faulted dst gathers its
+    src page), so the gather has no data dependency on the copy; the
+    physical page copy and this token's KV write ride the same program
+    as plain scatter ops.  With scales the pools are int8 and the kernel
+    dequants per page; the slot write requants (see _quant_token_write).
+    """
+    b = tokens.shape[0]
+    h = embed_tokens(cfg, params, tokens)
+    quant = k_scales is not None
+    n_pages = k_pages.shape[1]
+    page_map = jnp.arange(n_pages, dtype=jnp.int32)
+    if cow_src.shape[0]:
+        page_map = page_map.at[cow_dst].set(cow_src)
+
+    def combine(x):
+        return jax.lax.psum(x, axis_name) if axis_name else x
+
+    def body(h, xs):
+        if quant:
+            lp, kp, vp, ks, vs = xs
+        else:
+            lp, kp, vp = xs
+            ks = vs = None
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], x, lengths[:, None])
+        kvh = k.shape[2]
+        g = q.shape[2] // kvh
+        qc = q.reshape(b, 1, kvh, g, cfg.head_dim)
+        # attention first, against the pre-maintenance pool: the fresh
+        # token rides inline as the chunk, CoW redirects via page_map
+        a = paged_chunk_attention(qc, k, v, kp, vp, block_tables,
+                                  lengths, page_map, ks, vs, impl=impl)
+        a = a.reshape(b, 1, kvh * g, cfg.head_dim)
+        h = h + combine(jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"]))
+        # pool maintenance rides the same dispatch: service the faults
+        # (scales travel with their pages), then write the token's KV
+        # into its freshly-private slot
+        if cow_src.shape[0]:
+            kp = kp.at[cow_dst].set(kp[cow_src])
+            vp = vp.at[cow_dst].set(vp[cow_src])
+            if quant:
+                ks = ks.at[cow_dst].set(ks[cow_src])
+                vs = vs.at[cow_dst].set(vs[cow_src])
+        if quant:
+            kp, ks = _quant_token_write(kp, ks, slot_pages, slot_offsets,
+                                        k[:, 0])
+            vp, vs = _quant_token_write(vp, vs, slot_pages, slot_offsets,
+                                        v[:, 0])
+        else:
+            kp = kp.at[slot_pages, slot_offsets].set(k[:, 0])
+            vp = vp.at[slot_pages, slot_offsets].set(v[:, 0])
+        x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + _ffn(cfg, lp, x, combine, axis_name)
+        return h, ((kp, vp, ks, vs) if quant else (kp, vp))
+
+    xs = ((params["layers"], k_pages, v_pages, k_scales, v_scales)
+          if quant else (params["layers"], k_pages, v_pages))
+    h, pools = jax.lax.scan(body, h, xs)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(cfg, params, h)
+    return (logits,) + tuple(pools)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def paged_fused_decode_step(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    slot_pages: jax.Array,
+    slot_offsets: jax.Array,
+    tokens: jax.Array,
+    cow_src: jax.Array,
+    cow_dst: jax.Array,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    impl: str = "ref",
+):
+    """One fused decode step (single device): returns
+    ``(logits, k_pages, v_pages[, k_scales, v_scales])``."""
+    return _fused_decode_body(cfg, params, k_pages, v_pages, block_tables,
+                              lengths, slot_pages, slot_offsets, tokens,
+                              cow_src, cow_dst, k_scales, v_scales,
+                              impl=impl)
+
+
+def _verify_body(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [n, max_pages] — drafts share one table
+    lengths: jax.Array,       # [n] cached length (same for all rows)
+    tokens: jax.Array,        # [n, t] teacher-forced draft rows
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    *,
+    impl: str,
+    axis_name: Optional[str] = None,
+):
+    """Score t teacher-forced tokens per row in ONE pass (no pool writes).
+
+    The fused speculative-verify step: every row attends to the shared
+    cached prefix through the block table plus its own inline chunk with
+    in-chunk causal masking.  Pure scoring — the pools are read-only, so
+    k draft tokens cost one dispatch instead of k sequential decode
+    steps.  Returns logits [n, t, V].
+    """
+    b, t = tokens.shape
+    h = embed_tokens(cfg, params, tokens)
+    positions = lengths[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    quant = k_scales is not None
+    page_map = jnp.arange(k_pages.shape[1], dtype=jnp.int32)
+
+    def combine(x):
+        return jax.lax.psum(x, axis_name) if axis_name else x
+
+    def body(h, xs):
+        if quant:
+            lp, kp, vp, ks, vs = xs
+        else:
+            lp, kp, vp = xs
+            ks = vs = None
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], x, positions)
+        kvh = k.shape[2]
+        g = q.shape[2] // kvh
+        qc = q.reshape(b, t, kvh, g, cfg.head_dim)
+        a = paged_chunk_attention(qc, k, v, kp, vp, block_tables,
+                                  lengths, page_map, ks, vs, impl=impl)
+        a = a.reshape(b, t, kvh * g, cfg.head_dim)
+        h = h + combine(jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"]))
+        x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + _ffn(cfg, lp, x, combine, axis_name)
+        return h, None
+
+    xs = ((params["layers"], k_pages, v_pages, k_scales, v_scales)
+          if quant else (params["layers"], k_pages, v_pages))
+    h, _ = jax.lax.scan(body, h, xs)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_head(cfg, params, h)
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def paged_verify_step(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    tokens: jax.Array,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    impl: str = "ref",
+):
+    """Fused speculative verify (single device): logits [n, t, V]."""
+    return _verify_body(cfg, params, k_pages, v_pages, block_tables,
+                        lengths, tokens, k_scales, v_scales, impl=impl)
+
+
+def scale_spec(plan: ParallelPlan) -> P:
+    """Spec for int8 dequant scales [L, n_pages, kv]: shard the kv-head
+    dim exactly like the pools, so each shard's scales stay consistent
+    with its pool slice."""
+    return P(None, None, plan.tp_axis)
+
+
+def build_tp_fused_decode_step(cfg: ArchConfig, plan: ParallelPlan,
+                               params: Any, *, impl: str = "ref",
+                               specs: Optional[Any] = None,
+                               quantized: bool = False):
+    """The tensor-parallel fused decode step — ``_fused_decode_body``
+    under ONE compat-shimmed ``shard_map``; CoW vectors replicate (page
+    ids are kv-head-agnostic), int8 scales shard with their pools."""
+    if specs is None:
+        specs = serve_specs(cfg, plan, params)
+    lm_spec = specs.get("lm_head")
+    gather_logits = lm_spec is not None and plan.tp_axis in tuple(lm_spec)
+    kv_spec = kv_page_spec(plan)
+    sc_spec = scale_spec(plan)
+    rep = P()
+
+    if quantized:
+        def local_step(p, kp, vp, ks, vs, bt, lengths, slot_pages,
+                       slot_offsets, tokens, cow_src, cow_dst):
+            out = _fused_decode_body(
+                cfg, p, kp, vp, bt, lengths, slot_pages, slot_offsets,
+                tokens, cow_src, cow_dst, ks, vs, impl=impl,
+                axis_name=plan.tp_axis)
+            logits = out[0]
+            if gather_logits:
+                logits = jax.lax.all_gather(
+                    logits, plan.tp_axis, axis=logits.ndim - 1, tiled=True)
+            return (logits,) + out[1:]
+
+        in_specs = (specs, kv_spec, kv_spec, sc_spec, sc_spec,
+                    rep, rep, rep, rep, rep, rep, rep)
+        out_specs = (rep, kv_spec, kv_spec, sc_spec, sc_spec)
+    else:
+        def local_step(p, kp, vp, bt, lengths, slot_pages, slot_offsets,
+                       tokens, cow_src, cow_dst):
+            out = _fused_decode_body(
+                cfg, p, kp, vp, bt, lengths, slot_pages, slot_offsets,
+                tokens, cow_src, cow_dst, impl=impl,
+                axis_name=plan.tp_axis)
+            logits = out[0]
+            if gather_logits:
+                logits = jax.lax.all_gather(
+                    logits, plan.tp_axis, axis=logits.ndim - 1, tiled=True)
+            return (logits,) + out[1:]
+
+        in_specs = (specs, kv_spec, kv_spec,
+                    rep, rep, rep, rep, rep, rep, rep)
+        out_specs = (rep, kv_spec, kv_spec)
+
+    fn = shard_map(local_step, mesh=plan.mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return jax.jit(fn)
+
+
+def build_tp_verify_step(cfg: ArchConfig, plan: ParallelPlan, params: Any,
+                         *, impl: str = "ref",
+                         specs: Optional[Any] = None,
+                         quantized: bool = False):
+    """The tensor-parallel fused verify step (read-only pools)."""
+    if specs is None:
+        specs = serve_specs(cfg, plan, params)
+    lm_spec = specs.get("lm_head")
+    gather_logits = lm_spec is not None and plan.tp_axis in tuple(lm_spec)
+    kv_spec = kv_page_spec(plan)
+    sc_spec = scale_spec(plan)
+    rep = P()
+
+    if quantized:
+        def local_step(p, kp, vp, ks, vs, bt, lengths, tokens):
+            logits = _verify_body(cfg, p, kp, vp, bt, lengths, tokens,
+                                  ks, vs, impl=impl,
+                                  axis_name=plan.tp_axis)
+            if gather_logits:
+                logits = jax.lax.all_gather(
+                    logits, plan.tp_axis, axis=logits.ndim - 1, tiled=True)
+            return logits
+
+        in_specs = (specs, kv_spec, kv_spec, sc_spec, sc_spec,
+                    rep, rep, rep)
+    else:
+        def local_step(p, kp, vp, bt, lengths, tokens):
+            logits = _verify_body(cfg, p, kp, vp, bt, lengths, tokens,
+                                  impl=impl, axis_name=plan.tp_axis)
+            if gather_logits:
+                logits = jax.lax.all_gather(
+                    logits, plan.tp_axis, axis=logits.ndim - 1, tiled=True)
+            return logits
+
+        in_specs = (specs, kv_spec, kv_spec, rep, rep, rep)
+
+    fn = shard_map(local_step, mesh=plan.mesh, in_specs=in_specs,
+                   out_specs=rep, check_rep=False)
+    return jax.jit(fn)
+
+
 @partial(jax.jit, donate_argnums=(0, 1))
 def _copy_pages(k_pages: jax.Array, v_pages: jax.Array,
                 src: jax.Array, dst: jax.Array):
@@ -225,13 +570,30 @@ def _copy_pages(k_pages: jax.Array, v_pages: jax.Array,
             v_pages.at[:, dst].set(v_pages[:, src]))
 
 
+@partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def _copy_pages_scaled(k_pages: jax.Array, v_pages: jax.Array,
+                       k_scales: jax.Array, v_scales: jax.Array,
+                       src: jax.Array, dst: jax.Array):
+    """``_copy_pages`` for int8 pools: the per-page dequant scales travel
+    with their pages in the same single dispatch."""
+    return (k_pages.at[:, dst].set(k_pages[:, src]),
+            v_pages.at[:, dst].set(v_pages[:, src]),
+            k_scales.at[:, dst].set(k_scales[:, src]),
+            v_scales.at[:, dst].set(v_scales[:, src]))
+
+
 def _pad_pow2(src: List[int], dst: List[int]) -> tuple:
     """Pad the CoW op list to a power-of-two bucket to bound recompiles.
 
     Padding repeats the last real (src, dst) pair: duplicate scatter
-    indices then carry identical payloads, which is deterministic.
+    indices then carry identical payloads, which is deterministic.  An
+    empty op list stays empty — callers skip the dispatch (or pass the
+    zero-length vectors straight to the fused step, whose page_map is
+    then the identity).
     """
     n = len(src)
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
     m = 1
     while m < n:
         m *= 2
@@ -304,8 +666,8 @@ class TokenDomain:
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, num_pages: int = 256,
                  page_size: int = 16, max_pages_per_seq: int = 32,
-                 attn_impl: str = "ref", mesh: Optional[Mesh] = None,
-                 tp: Optional[int] = None):
+                 attn_impl: str = "auto", kv_dtype: Optional[str] = None,
+                 mesh: Optional[Mesh] = None, tp: Optional[int] = None):
         cfg = model.cfg
         assert cfg.family in ("dense", "vlm", "audio", "moe"), (
             "paged-KV serving targets attention archs; SSM archs branch "
@@ -341,8 +703,32 @@ class ServeEngine:
         self.kv = KVBranchManager(num_pages=num_pages, page_size=page_size)
         self.page_size = page_size
         self.max_pages = max_pages_per_seq
-        self.attn_impl = attn_impl
-        dt = jnp.dtype(cfg.dtype)
+        # --- impl resolution + decode fast path -----------------------
+        # "auto" -> pallas on TPU, interpret under REPRO_KERNELS_INTERPRET,
+        # else the jnp reference.  Any impl but "ref" takes the fused
+        # one-dispatch path; "fused_ref" is the CPU spelling of it (the
+        # fused step with the chunk-kernel's jnp oracle inside).
+        if kv_dtype not in (None, "int8"):
+            raise ValueError(f"kv_dtype must be None or 'int8', "
+                             f"got {kv_dtype!r}")
+        self.kv_dtype = kv_dtype
+        self.quantized = kv_dtype == "int8"
+        impl = resolve_impl(
+            attn_impl,
+            cpu_fallback="fused_ref" if self.quantized else "ref")
+        if impl not in ("ref", "fused_ref", "interpret", "pallas"):
+            raise ValueError(f"unknown attn_impl {attn_impl!r}")
+        if self.quantized and impl == "ref":
+            raise ValueError(
+                "kv_dtype='int8' requires the fused decode path "
+                "(attn_impl 'auto', 'fused_ref', 'interpret' or "
+                "'pallas'); the legacy 'ref' gather is fp-only")
+        self.attn_impl = impl
+        self.fast_path = impl != "ref"
+        # what the fused chunk op is told to run ("fused_ref" is engine-
+        # level routing, the kernel-level impl underneath it is "ref")
+        self._chunk_impl = "ref" if impl == "fused_ref" else impl
+        dt = jnp.dtype(jnp.int8) if self.quantized else jnp.dtype(cfg.dtype)
         shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
                  cfg.head_dim)
         # allocate the pools directly into their mesh sharding — a pool
@@ -351,9 +737,33 @@ class ServeEngine:
                  else {"device": self._kv_sharding})
         self.k_pages = jnp.zeros(shape, dt, **kv_kw)
         self.v_pages = jnp.zeros(shape, dt, **kv_kw)
-        self._tp_step = (build_tp_decode_step(cfg, self.plan, params,
-                                              impl=attn_impl, specs=specs)
-                         if self.plan.is_distributed else None)
+        if self.quantized:
+            sshape = (cfg.num_layers, num_pages, cfg.num_kv_heads)
+            self._scale_sharding = (
+                None if mesh is None or not self.plan.is_distributed
+                else NamedSharding(mesh, scale_spec(self.plan)))
+            sc_kw = ({} if self._scale_sharding is None
+                     else {"device": self._scale_sharding})
+            self.k_scales = jnp.zeros(sshape, jnp.float32, **sc_kw)
+            self.v_scales = jnp.zeros(sshape, jnp.float32, **sc_kw)
+        else:
+            self._scale_sharding = None
+            self.k_scales = None
+            self.v_scales = None
+        if self.plan.is_distributed:
+            if self.fast_path:
+                self._tp_step = build_tp_fused_decode_step(
+                    cfg, self.plan, params, impl=self._chunk_impl,
+                    specs=specs, quantized=self.quantized)
+            else:
+                self._tp_step = build_tp_decode_step(
+                    cfg, self.plan, params, impl=impl, specs=specs)
+            self._tp_verify = build_tp_verify_step(
+                cfg, self.plan, params, impl=self._chunk_impl,
+                specs=specs, quantized=self.quantized)
+        else:
+            self._tp_step = None
+            self._tp_verify = None
         # Token tails ride the same lifecycle kernel as the page tables:
         # kv.commit/abort/invalidate resolves both domains atomically.
         self.token_domain = TokenDomain()
@@ -361,6 +771,8 @@ class ServeEngine:
         # CoW fault-service instrumentation (benchmarks read these)
         self.cow_dispatches = 0   # fused _copy_pages device calls
         self.cow_faults = 0       # individual page copies serviced
+        self.cow_inline_steps = 0  # steps whose faults rode the fused step
+        self.verify_dispatches = 0  # fused spec-verify device calls
 
     @staticmethod
     def _check_tp_divisibility(cfg: ArchConfig, tp: int) -> None:
@@ -392,6 +804,12 @@ class ServeEngine:
             return pages
         return jax.device_put(pages, self._kv_sharding)
 
+    def _pin_scales(self) -> None:
+        if self._scale_sharding is None:
+            return
+        self.k_scales = jax.device_put(self.k_scales, self._scale_sharding)
+        self.v_scales = jax.device_put(self.v_scales, self._scale_sharding)
+
     # ------------------------------------------------------------------
     def add_request(self, prompt: Sequence[int]) -> int:
         """Prefill a prompt into a fresh paged sequence.
@@ -413,15 +831,33 @@ class ServeEngine:
             for pi, page in enumerate(table):
                 lo = pi * self.page_size
                 hi = min(lo + self.page_size, n_cached)
-                self.k_pages = self.k_pages.at[:, page, : hi - lo].set(
-                    k[:, lo:hi])
-                self.v_pages = self.v_pages.at[:, page, : hi - lo].set(
-                    v[:, lo:hi])
+                if self.quantized:
+                    # per-page/per-kv-head scale over the filled part
+                    for pool, scales, src in (
+                            ("k_pages", "k_scales", k[:, lo:hi]),
+                            ("v_pages", "v_scales", v[:, lo:hi])):
+                        fp = src.astype(jnp.float32)   # [L, n, kv, hd]
+                        sc = jnp.maximum(
+                            jnp.max(jnp.abs(fp), axis=(1, 3)) / 127.0,
+                            1e-8)                      # [L, kv]
+                        q8 = jnp.clip(
+                            jnp.round(fp / sc[:, None, :, None]),
+                            -127, 127).astype(jnp.int8)
+                        setattr(self, pool, getattr(self, pool).at[
+                            :, page, : hi - lo].set(q8))
+                        setattr(self, scales, getattr(self, scales).at[
+                            :, page].set(sc))
+                else:
+                    self.k_pages = self.k_pages.at[
+                        :, page, : hi - lo].set(k[:, lo:hi])
+                    self.v_pages = self.v_pages.at[
+                        :, page, : hi - lo].set(v[:, lo:hi])
             # eager scatter of an unsharded prefill cache can drift the
             # pool's layout; re-pin so the hot loop never pays a
             # per-step reshard at the shard_map boundary
             self.k_pages = self._pin_kv(self.k_pages)
             self.v_pages = self._pin_kv(self.v_pages)
+            self._pin_scales()
         self.token_domain.seed(sid, prompt)
         return sid
 
@@ -478,9 +914,18 @@ class ServeEngine:
         kv-head dim — each shard copies its slice of every faulted
         page, still ONE dispatch for the whole batch.
         """
+        if not src:
+            return            # empty plan: nothing to dispatch
         s, d = _pad_pow2(src, dst)
-        self.k_pages, self.v_pages = _copy_pages(
-            self.k_pages, self.v_pages, s, d)
+        if self.quantized:
+            (self.k_pages, self.v_pages, self.k_scales,
+             self.v_scales) = _copy_pages_scaled(
+                self.k_pages, self.v_pages, self.k_scales,
+                self.v_scales, s, d)
+            self._pin_scales()
+        else:
+            self.k_pages, self.v_pages = _copy_pages(
+                self.k_pages, self.v_pages, s, d)
         self.k_pages = self._pin_kv(self.k_pages)
         self.v_pages = self._pin_kv(self.v_pages)
         self.cow_dispatches += 1
@@ -531,7 +976,8 @@ class ServeEngine:
             for cow in slot.cow:
                 cow_src.append(cow.src_page)
                 cow_dst.append(cow.dst_page)
-        if cow_src:
+        if not self.fast_path and cow_src:
+            # legacy path: service faults as their own dispatch first
             self._service_cow(cow_src, cow_dst)
         bt, _ = self.kv.dense_block_tables(seq_ids, self.max_pages)
         last_tokens = jnp.asarray(
@@ -544,7 +990,29 @@ class ServeEngine:
             jnp.asarray([sl.offset for sl in slots], jnp.int32),
             last_tokens,
         )
-        if self._tp_step is not None:
+        if self.fast_path:
+            # fused path: faults ride the decode dispatch itself as a
+            # CoW indirection vector — cow_dispatches stays untouched
+            cs, cd = _pad_pow2(cow_src, cow_dst)
+            if cow_src:
+                self.cow_faults += len(cow_src)
+                self.cow_inline_steps += 1
+            step_args = step_args + (cs, cd)
+            if self.quantized:
+                step_args = step_args + (self.k_scales, self.v_scales)
+            if self._tp_step is not None:
+                out = self._tp_step(self.params, *step_args)
+            else:
+                out = paged_fused_decode_step(
+                    self.cfg, self.params, *step_args,
+                    impl=self._chunk_impl)
+            if self.quantized:
+                (logits, self.k_pages, self.v_pages,
+                 self.k_scales, self.v_scales) = out
+                self._pin_scales()
+            else:
+                logits, self.k_pages, self.v_pages = out
+        elif self._tp_step is not None:
             logits, self.k_pages, self.v_pages = self._tp_step(
                 self.params, *step_args)
         else:
@@ -564,6 +1032,46 @@ class ServeEngine:
             self.token_domain.append(s, t)
         return out
 
+    def spec_verify(self, seq: int,
+                    drafts: Sequence[Sequence[int]]) -> List[List[int]]:
+        """Score draft continuations of ``seq`` in ONE fused dispatch.
+
+        Each draft is k proposed next tokens.  The step teacher-forces
+        ``[pending_token] + draft[:-1]`` per row over the sequence's
+        (shared, read-only) block table, so row position ``i`` yields the
+        target's greedy token *given the draft's first i tokens* — the
+        exact sequential-verifier result, k dispatches collapsed to one.
+        Pure scoring: no KV is written, ``seq`` is untouched.
+
+        Returns the target's greedy token at every draft position, one
+        row per draft.  Callers accept each draft's longest prefix that
+        matches its row (see ``speculative_decode``).
+        """
+        drafts = [list(d) for d in drafts]
+        if not drafts:
+            raise ValueError("need at least one draft")
+        t = len(drafts[0])
+        if t < 1 or any(len(d) != t for d in drafts):
+            raise ValueError("drafts must be non-empty and equal-length")
+        length = self.kv.length(seq)       # raises if seq is not live
+        pending = self.token_domain.get(seq)[-1]
+        rows = jnp.asarray([[pending] + d[:-1] for d in drafts], jnp.int32)
+        bt_row, _ = self.kv.dense_block_tables([seq], self.max_pages)
+        n = len(drafts)
+        bt = jnp.asarray(np.tile(np.asarray(bt_row), (n, 1)))
+        lens = jnp.full((n,), length, jnp.int32)
+        args = (self.k_pages, self.v_pages, bt, lens, rows)
+        if self.quantized:
+            args = args + (self.k_scales, self.v_scales)
+        if self._tp_verify is not None:
+            logits = self._tp_verify(self.params, *args)
+        else:
+            logits = paged_verify_step(self.cfg, self.params, *args,
+                                       impl=self._chunk_impl)
+        self.verify_dispatches += 1
+        out = np.asarray(jnp.argmax(logits, axis=-1))
+        return [[int(x) for x in row] for row in out]
+
     def tokens(self, seq: int) -> List[int]:
         return list(self.token_domain.get(seq))
 
@@ -572,5 +1080,9 @@ class ServeEngine:
         st["token_tails"] = len(self.token_domain)
         st["cow_dispatches"] = self.cow_dispatches
         st["cow_faults"] = self.cow_faults
+        st["cow_inline_steps"] = self.cow_inline_steps
+        st["verify_dispatches"] = self.verify_dispatches
         st["tp"] = self.tp
+        st["attn_impl"] = self.attn_impl
+        st["kv_dtype"] = self.kv_dtype or str(self.cfg.dtype)
         return st
