@@ -11,8 +11,14 @@ multiplexes all policies' decode work into the same continuous batch
 via the session's epoll-like ``Waiter``.
 
 Run:  PYTHONPATH=src python examples/agentic_serve.py
+
+``--trace trace.json`` records per-branch lifecycle spans, prints the
+one-screen metrics summary, and writes a Chrome/Perfetto timeline —
+open it at https://ui.perfetto.dev to see the fork/explore/commit story
+as one row per branch.
 """
 
+import argparse
 import dataclasses
 
 import jax
@@ -21,15 +27,23 @@ from repro.api import BranchSession
 from repro.configs import get_config
 from repro.explore_ctx import ExplorationDriver, beam_search, tree_search
 from repro.models.model import Model
+from repro.obs import Observability
 from repro.runtime.serve_loop import ServeEngine
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace.json on exit and "
+                         "print the metrics summary")
+    args = ap.parse_args(argv)
+
     cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
     model = Model(cfg, attn_chunk=8, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=512, page_size=8,
-                         max_pages_per_seq=32)
+                         max_pages_per_seq=32,
+                         obs=Observability(trace=args.trace is not None))
     session = BranchSession(engine, max_batch=8, seed=42)
     driver = ExplorationDriver(session)
 
@@ -68,6 +82,11 @@ def main():
     print(f"final sequence: {beam.result.tokens}")
     print(f"concurrent sequence: {beam2.result.tokens}")
     print(f"pool after (drained): {session.tree()['pool']}")
+    if args.trace:
+        print("metrics summary:")
+        print(session.obs.metrics.format())
+        session.trace(args.trace)
+        print(f"wrote {args.trace} — open at https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

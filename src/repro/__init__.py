@@ -43,6 +43,7 @@ __all__ = [
     "kernels",
     "launch",
     "models",
+    "obs",
     "optim",
     "runtime",
 ]

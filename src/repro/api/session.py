@@ -124,6 +124,10 @@ class BranchSession:
                 f"BranchSession needs a ServeEngine or Scheduler, got "
                 f"{type(engine).__name__}", errno=Errno.EINVAL)
         self.engine = self.sched.engine
+        # the engine stack's observability hub (metrics registry +
+        # tracer); build the engine with Observability(trace=True) to
+        # record spans, then session.trace(path) exports the timeline
+        self.obs = self.engine.obs
         self.store = store
         # Composite sessions fork the store domain and the KV domain
         # atomically; the KV fork goes through scheduler admission with
@@ -691,8 +695,26 @@ class BranchSession:
     # ------------------------------------------------------------------
     # introspection: stat() / tree()
     # ------------------------------------------------------------------
-    def stat(self, hd: int) -> Dict[str, Any]:
-        """Procfs-style status of one handle (``/proc/<pid>/stat``)."""
+    def stat(self, hd: Optional[int] = None, *,
+             metrics: bool = False) -> Dict[str, Any]:
+        """Procfs-style status (``/proc/<pid>/stat``).
+
+        With a handle: that branch's view.  Without one
+        (``session.stat(metrics=True)``): the whole-session ``tree()``
+        view.  ``metrics=True`` attaches the obs-registry snapshot
+        (counters/gauges/histograms) plus per-branch page footprints —
+        the machine-readable face of ``format_tree(metrics=True)``.
+        """
+        if hd is None:
+            out = self.tree()
+        else:
+            out = self._stat_one(hd)
+        if metrics:
+            out["metrics"] = self.obs.metrics.snapshot()
+            out["footprints"] = self.engine.kv.footprints()
+        return out
+
+    def _stat_one(self, hd: int) -> Dict[str, Any]:
         entry = self._entry(hd)
         self._refresh(entry)
         status = self.status(hd)
@@ -745,8 +767,22 @@ class BranchSession:
             },
         }
 
-    def format_tree(self) -> str:
-        """Human-readable ``tree()`` (the ``cat /proc/branches`` view)."""
+    def trace(self, path) -> dict:
+        """Export the session's Chrome/Perfetto timeline to ``path``.
+
+        Only meaningful when the engine was built with
+        ``Observability(trace=True)``; an untraced session writes a
+        valid-but-empty trace.  Open the file at
+        https://ui.perfetto.dev or chrome://tracing.
+        """
+        return self.obs.tracer.export_chrome_trace(path)
+
+    def format_tree(self, metrics: bool = False) -> str:
+        """Human-readable ``tree()`` (the ``cat /proc/branches`` view).
+
+        ``metrics=True`` appends the obs registry as a procfs-style
+        block — the ``--metrics``/``--trace`` one-screen summary.
+        """
         view = self.tree()
         lines: List[str] = []
 
@@ -766,6 +802,10 @@ class BranchSession:
             f"{pool['pages_shared']} shared "
             f"({pool['utilization']:.0%} used); "
             f"handles: {view['handles']['open']} open")
+        if metrics:
+            lines.append("metrics:")
+            lines.extend("  " + ln
+                         for ln in self.obs.metrics.format().splitlines())
         return "\n".join(lines)
 
 

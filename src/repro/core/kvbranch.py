@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.errors import FrozenOriginError, PoolExhausted
 from repro.core.lifecycle import LIVE, BranchStatus, BranchTree
+from repro.obs import Observability
 
 # Historical alias: sequence status *is* branch status now that every
 # domain shares the kernel's vocabulary.
@@ -66,17 +67,33 @@ class AppendSlot:
 class KVBranchManager:
     """Block tables + refcounts plugged into the branch-lifecycle kernel."""
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 obs: Observability = None):
         if num_pages < 1 or page_size < 1:
             raise ValueError("num_pages and page_size must be positive")
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refcount = np.zeros((num_pages,), dtype=np.int32)
+        self.obs = Observability() if obs is None else obs
+        m = self.obs.metrics
+        self._c_forks = m.counter("kv.branches_forked")
+        self._c_commits = m.counter("kv.commits")
+        self._c_aborts = m.counter("kv.aborts")
+        self._c_invalidations = m.counter("kv.invalidations")
+        self._g_free = m.gauge("kv.pages_free")
+        self._g_free.set(num_pages)
+        self._g_shared = m.gauge("kv.pages_shared")
+        self._g_util = m.gauge("kv.pool_utilization")
+        # incremental shared-page count (refcount 1<->2 crossings), so
+        # the gauge never pays the O(num_pages) scan stats() does
+        self._shared_pages = 0
+        self._invalidated_once: set = set()
         # KV semantics: forking freezes the origin (appends denied) until
         # all children resolve; committed sequences are gone for good.
         self._tree = BranchTree(freeze_on_fork=True,
-                                allow_fork_resolved=False)
+                                allow_fork_resolved=False,
+                                tracer=self.obs.tracer)
         self._tree.attach(self)
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
@@ -102,18 +119,36 @@ class KVBranchManager:
             raise PoolExhausted("KV page pool exhausted (-ENOSPC)")
         page = self._free.pop()
         self._refcount[page] = 1
+        self._update_pool_gauges()
         return page
+
+    def _update_pool_gauges(self) -> None:
+        free = len(self._free)
+        self._g_free.set(free)
+        self._g_util.set(round(1.0 - free / self.num_pages, 4))
 
     def _incref(self, pages: Sequence[int]) -> None:
         for p in pages:
             self._refcount[p] += 1
+            if self._refcount[p] == 2:
+                self._shared_pages += 1
+        if pages:
+            self._g_shared.set(self._shared_pages)
 
     def _decref(self, pages: Sequence[int]) -> None:
+        freed = False
         for p in pages:
             self._refcount[p] -= 1
-            if self._refcount[p] == 0:
+            if self._refcount[p] == 1:
+                self._shared_pages -= 1
+            elif self._refcount[p] == 0:
                 self._free.append(p)
+                freed = True
             assert self._refcount[p] >= 0, f"page {p} refcount underflow"
+        if pages:
+            self._g_shared.set(self._shared_pages)
+            if freed:
+                self._update_pool_gauges()
 
     # ------------------------------------------------------------------
     # BranchDomain payload hooks (called by the kernel, under its lock)
@@ -124,6 +159,7 @@ class KVBranchManager:
             self._incref(table)
             self._tables[c] = list(table)
             self._lengths[c] = self._lengths[parent]
+        self._c_forks.inc(len(children))
 
     def on_commit(self, child: int, parent: int) -> None:
         # The parent adopts the child's table, *transferring* the child's
@@ -132,11 +168,18 @@ class KVBranchManager:
         self._tables[parent] = self._tables[child]
         self._lengths[parent] = self._lengths[child]
         self._tables[child] = []
+        self._c_commits.inc()
 
     def on_abort(self, branch: int) -> None:
         self._release_pages(branch)
+        self._c_aborts.inc()
 
     def on_invalidate(self, branch: int) -> None:
+        # idempotent hook (abort-after-ESTALE re-fires it); count each
+        # branch's invalidation once
+        if branch not in self._invalidated_once:
+            self._invalidated_once.add(branch)
+            self._c_invalidations.inc()
         self._release_pages(branch)
 
     def on_reap(self, branch: int) -> None:
@@ -146,6 +189,7 @@ class KVBranchManager:
         if table:
             self._decref(table)
         self._lengths.pop(branch, None)
+        self._invalidated_once.discard(branch)
 
     def _release_pages(self, branch: int) -> None:
         table = self._tables.get(branch)
@@ -393,6 +437,14 @@ class KVBranchManager:
             bt[i, : len(table)] = table
             lens[i] = self._lengths[sid]
         return bt, lens
+
+    def footprints(self) -> Dict[int, int]:
+        """Per-branch page footprint (pages referenced by each live
+        branch's table) — the per-tenant accounting view."""
+        with self._tree.lock:
+            return {sid: len(table) for sid, table in self._tables.items()
+                    if sid in self._tree
+                    and self._tree.node(sid).status in LIVE}
 
     def stats(self) -> Dict[str, int]:
         return {

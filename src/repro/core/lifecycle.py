@@ -53,6 +53,7 @@ from enum import Enum
 from typing import Dict, Iterator, List, Optional, Protocol, runtime_checkable
 
 from repro.core.errors import BranchStateError, StaleBranchError
+from repro.obs.tracer import NULL_TRACER, Tracer
 
 
 class BranchStatus(Enum):
@@ -135,10 +136,19 @@ class BranchTree:
         If True, COMMITTED nodes may be forked from (their payload was
         merged upward but chain resolution still works — store
         semantics).
+    tracer:
+        Optional :class:`repro.obs.Tracer`.  When enabled, every branch
+        carries one ``explore`` span from fork to resolution (track =
+        branch id, process = the root of its exploration subtree) plus
+        instant events for fork/commit/abort/invalidated/frozen/resumed
+        — the span tree mirrors the branch tree.  Defaults to the
+        shared disabled :data:`~repro.obs.tracer.NULL_TRACER`, so every
+        emit site below costs one predicted branch when tracing is off.
     """
 
     def __init__(self, *, freeze_on_fork: bool = False,
-                 allow_fork_resolved: bool = False):
+                 allow_fork_resolved: bool = False,
+                 tracer: Optional[Tracer] = None):
         self.lock = threading.RLock()
         self._ids = itertools.count(0)
         self._groups = itertools.count(1)
@@ -146,6 +156,7 @@ class BranchTree:
         self._domains: List[BranchDomain] = []
         self.freeze_on_fork = freeze_on_fork
         self.allow_fork_resolved = allow_fork_resolved
+        self.tracer = NULL_TRACER if tracer is None else tracer
 
     # ------------------------------------------------------------------
     # domain registration
@@ -189,6 +200,8 @@ class BranchTree:
                 parent = self._nodes[node.parent]
                 if parent.epoch != node.parent_epoch_at_fork:
                     node.status = BranchStatus.STALE
+                    self._trace_resolve(branch_id, "invalidated",
+                                        "invalidated")
                     raise StaleBranchError(
                         f"branch {branch_id} is stale (parent epoch "
                         f"{parent.epoch} != {node.parent_epoch_at_fork} "
@@ -213,6 +226,8 @@ class BranchTree:
                 parent = self._nodes[node.parent]
                 if parent.epoch != node.parent_epoch_at_fork:
                     node.status = BranchStatus.STALE
+                    self._trace_resolve(branch_id, "invalidated",
+                                        "invalidated")
             return node.status
 
     def epoch(self, branch_id: int) -> int:
@@ -241,11 +256,28 @@ class BranchTree:
     # ------------------------------------------------------------------
     # lifecycle transitions
     # ------------------------------------------------------------------
+    def _trace_resolve(self, branch_id: int, status: str,
+                       event: Optional[str] = None) -> None:
+        """Close a branch's explore-span and fire its resolution instant.
+
+        ``end_span`` pops the track's open span and returns False when
+        nothing is open, so racing closers — eager sibling
+        invalidation, a lazy -ESTALE discovery in ``check_live``/
+        ``status``, an abort-after-ESTALE, a scheduler purge's
+        ``reap`` — resolve to exactly one span close and exactly one
+        instant per branch, never a double-close or a leak.
+        """
+        tr = self.tracer
+        if tr.enabled and tr.end_span(branch_id, status=status) and event:
+            tr.instant(branch_id, event)
+
     def create_root(self) -> int:
         """Create a parentless branch (a new tree root / base namespace)."""
         with self.lock:
             bid = next(self._ids)
             self._nodes[bid] = BranchNode(branch_id=bid, parent=None)
+            if self.tracer.enabled:
+                self.tracer.begin_span(bid, "explore", group=bid, root=True)
             return bid
 
     def fork(self, parent: int, n: int = 1) -> List[int]:
@@ -279,8 +311,20 @@ class BranchTree:
                 children.append(bid)
             for domain in self._domains:
                 domain.on_fork(parent, children)
+            frozen = False
             if self.freeze_on_fork and pnode.status is BranchStatus.ACTIVE:
                 pnode.status = BranchStatus.FROZEN
+                frozen = True
+            tr = self.tracer
+            if tr.enabled:
+                pg = tr.group_of(parent, parent)
+                for bid in children:
+                    tr.begin_span(bid, "explore", parent=parent, group=pg,
+                                  fork_group=group)
+                tr.instant(parent, "fork", children=list(children),
+                           group=group)
+                if frozen:
+                    tr.instant(parent, "frozen")
             return children
 
     def commit(self, branch_id: int) -> int:
@@ -305,11 +349,14 @@ class BranchTree:
                 domain.on_commit(branch_id, parent.branch_id)
             node.status = BranchStatus.COMMITTED
             parent.epoch += 1   # the CAS bump: every sibling is now stale
+            self._trace_resolve(branch_id, "committed", "commit")
             for sid in parent.children:
                 if sid != branch_id and self._nodes[sid].status in LIVE:
                     self._invalidate(self._nodes[sid])
             if parent.status is BranchStatus.FROZEN:
                 parent.status = BranchStatus.ACTIVE
+                if self.tracer.enabled:
+                    self.tracer.instant(parent.branch_id, "resumed")
             return parent.branch_id
 
     def abort(self, branch_id: int) -> None:
@@ -334,6 +381,7 @@ class BranchTree:
             node.status = BranchStatus.ABORTED
             for domain in self._domains:
                 domain.on_abort(branch_id)
+            self._trace_resolve(branch_id, "aborted", "aborted")
             self._maybe_resume_parent(node)
 
     def invalidate(self, branch_id: int,
@@ -357,6 +405,10 @@ class BranchTree:
         node.status = status
         for domain in self._domains:
             domain.on_invalidate(node.branch_id)
+        self._trace_resolve(
+            node.branch_id,
+            "invalidated" if status is BranchStatus.STALE else status.value,
+            "invalidated")
 
     def reap(self, branch_id: int) -> int:
         """Garbage-collect a fully-resolved subtree from the kernel.
@@ -395,6 +447,13 @@ class BranchTree:
                     hook = getattr(domain, "on_reap", None)
                     if hook is not None:
                         hook(node.branch_id)
+                # a scheduler purge may reap descendants whose lazy
+                # -ESTALE was never observed: their explore-spans are
+                # still open and must close as invalidated here (the
+                # one-shot guard makes this a no-op for already-closed
+                # tracks)
+                self._trace_resolve(node.branch_id, "invalidated",
+                                    "invalidated")
             return len(members)
 
     def _maybe_resume_parent(self, node: BranchNode) -> None:
@@ -406,6 +465,8 @@ class BranchTree:
             # all children resolved -> the origin resumes (paper §5.2:
             # "if all branches abort, the parent resumes")
             parent.status = BranchStatus.ACTIVE
+            if self.tracer.enabled:
+                self.tracer.instant(parent.branch_id, "resumed")
 
     # ------------------------------------------------------------------
     # introspection

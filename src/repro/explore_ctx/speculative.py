@@ -77,6 +77,17 @@ def speculative_decode(ctx: BranchContext, *, n_drafts: int = 3,
         verified = [0] * len(drafts)
     best = max(range(len(drafts)), key=lambda i: verified[i])
     accepted = verified[best]
+    # acceptance telemetry on the engine's obs hub: proposed counts every
+    # draft position scored by the fused verify, accepted only the
+    # winning draft's verified prefix (a fallback round is an honest 0)
+    m = ctx.session.obs.metrics
+    prop = m.counter("spec.tokens_proposed")
+    acc = m.counter("spec.tokens_accepted")
+    m.counter("spec.rounds").inc()
+    prop.inc(t * len(drafts))
+    acc.inc(accepted)
+    m.gauge("spec.acceptance_rate").set(
+        round(acc.value / max(prop.value, 1), 4))
     fallback = accepted == 0
     if fallback:
         # every draft diverged at its first token: the parked fallback

@@ -35,6 +35,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from pathlib import Path
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
@@ -45,16 +46,27 @@ from repro.core.errors import (
     StaleBranchError,
 )
 from repro.fs.chunkstore import ChunkStore
+from repro.obs import Observability
 
 _TOMB = "__tombstone__"
 BASE = "base"
 
 
 class BranchFS:
-    def __init__(self, root: str | Path):
+    def __init__(self, root: str | Path, *,
+                 obs: Optional[Observability] = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.chunks = ChunkStore(self.root / "objects")
+        self.obs = Observability() if obs is None else obs
+        m = self.obs.metrics
+        # a CoW fault = first write to a path this branch only inherited
+        # (the delta-layer analogue of the KV pool's shared-tail copy)
+        self._c_cow_faults = m.counter("fs.cow_faults")
+        self._c_writes = m.counter("fs.writes")
+        self._c_commits = m.counter("fs.commits")
+        self._h_commit_us = m.histogram("fs.commit_us")
+        self._g_materialized = m.gauge("fs.chunks_materialized")
         self._lock = threading.RLock()
         self._tree_path = self.root / "tree.json"
         self._delta_dir = self.root / "manifests"
@@ -190,6 +202,7 @@ class BranchFS:
     def commit(self, name: str) -> str:
         """Atomic commit-to-parent with first-commit-wins (§4.3)."""
         with self._lock:
+            t0 = time.perf_counter_ns()
             b = self._check_live(name)
             if self._live_children(b):
                 raise BranchStateError(
@@ -232,6 +245,9 @@ class BranchFS:
             self._persist_tree(durable=True)  # the durability point
             if drop:
                 self.chunks.decref(drop)
+            self._c_commits.inc()
+            self._h_commit_us.observe(
+                (time.perf_counter_ns() - t0) / 1000.0)
             return parent_name
 
     def abort(self, name: str) -> None:
@@ -267,14 +283,33 @@ class BranchFS:
             return branch, rest
         return default_branch, path
 
+    def _inherited(self, branch: str, path: str) -> bool:
+        """Whether ``path`` resolves through an ancestor's delta layer."""
+        first = True
+        for level in self._chain(branch):
+            if first:
+                first = False
+                continue
+            delta = self._delta(level)
+            if path in delta:
+                return delta[path] != _TOMB
+        return False
+
     def write(self, branch: str, path: str, data: bytes) -> None:
         branch, path = self._split(path, branch)
         with self._lock:
             b = self._check_live(branch)
             if self._live_children(b):
                 raise FrozenOriginError(f"branch {branch} is frozen")
-            cid = self.chunks.put(data)
             delta = self._delta(branch)
+            self._c_writes.inc()
+            if (path not in delta and b["parent"] is not None
+                    and self._inherited(branch, path)):
+                # first write to an inherited path: this branch breaks
+                # sharing with its ancestors — the FS-layer CoW fault
+                self._c_cow_faults.inc()
+            cid = self.chunks.put(data)
+            self._g_materialized.set(self.chunks.materialized)
             old = delta.get(path)
             delta[path] = cid
             self._persist_delta(branch)  # no fsync: ephemeral until commit

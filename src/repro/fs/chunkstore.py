@@ -32,6 +32,9 @@ class ChunkStore:
         self._refs: Dict[str, int] = {}
         if self._refs_path.exists():
             self._refs = json.loads(self._refs_path.read_text())
+        # chunk files actually written (dedup hits don't count); BranchFS
+        # mirrors this into its obs gauge `fs.chunks_materialized`
+        self.materialized = 0
 
     def _chunk_path(self, cid: str) -> Path:
         # two-level fanout like .git/objects, keeps directories small
@@ -59,6 +62,7 @@ class ChunkStore:
                 except BaseException:
                     os.unlink(tmp)
                     raise
+                self.materialized += 1
             self._refs[cid] = self._refs.get(cid, 0) + 1
             self._persist_refs()
             return cid

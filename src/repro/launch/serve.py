@@ -36,12 +36,17 @@ def main(argv=None) -> int:
     ap.add_argument("--tp", type=int, default=None,
                     help="tensor-parallel width of the serving mesh "
                          "(default: single-device)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-branch lifecycle spans and write a "
+                         "Chrome/Perfetto trace.json here on exit "
+                         "(also prints the one-screen metrics summary)")
     args = ap.parse_args(argv)
 
     from repro.api import BranchSession
     from repro.configs import get_config, reduced
     from repro.explore_ctx import ExplorationDriver, best_of_n
     from repro.models.model import Model
+    from repro.obs import Observability
     from repro.runtime.serve_loop import ServeEngine
 
     cfg = get_config(args.arch)
@@ -51,7 +56,8 @@ def main(argv=None) -> int:
     model = Model(cfg, attn_chunk=8, remat=False)
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=1024, page_size=8,
-                         max_pages_per_seq=64, tp=args.tp)
+                         max_pages_per_seq=64, tp=args.tp,
+                         obs=Observability(trace=args.trace is not None))
     session = BranchSession(engine, max_batch=args.max_batch, seed=1)
     if session.tp > 1:
         print(f"serving mesh: tp={session.tp} over "
@@ -84,7 +90,10 @@ def main(argv=None) -> int:
               f"(best of {res.stats.get('branches', 0)}, "
               f"scores {scores}){note}")
     print("session tree (procfs view):")
-    print(session.format_tree())
+    print(session.format_tree(metrics=args.trace is not None))
+    if args.trace:
+        session.trace(args.trace)
+        print(f"wrote {args.trace} — open at https://ui.perfetto.dev")
     return 0
 
 

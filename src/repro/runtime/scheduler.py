@@ -36,6 +36,7 @@ entries for retired work.
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -64,6 +65,7 @@ class Request:
     worst_pages: int = 0               # pages_for(prompt + max_new_tokens)
     seq: Optional[int] = None          # assigned at admission
     hold_on_admit: bool = False        # park immediately (explorations)
+    submitted_ns: int = 0              # queue-wait clock start
 
 
 class Scheduler:
@@ -100,6 +102,17 @@ class Scheduler:
         self._key = jax.random.PRNGKey(self.config.seed)
         self.steps = 0
         self.tokens_generated = 0
+        # admission outcomes + ledger telemetry, on the engine's hub
+        self.obs = engine.obs
+        m = self.obs.metrics
+        self._c_submitted = m.counter("sched.submitted")
+        self._c_rejected = m.counter("sched.rejected")
+        self._c_admitted = m.counter("sched.admitted")
+        self._c_forks_admitted = m.counter("sched.forks_admitted")
+        self._c_forks_denied = m.counter("sched.forks_denied")
+        self._c_retired = m.counter("sched.retired")
+        self._h_admission_wait = m.histogram("sched.admission_wait_us")
+        self._g_reserved = m.gauge("sched.pages_reserved")
 
     @property
     def tp(self) -> int:
@@ -134,19 +147,23 @@ class Scheduler:
         blowing up a later decode step.
         """
         worst = self._pages_for(len(prompt) + max_new_tokens)
+        self._c_submitted.inc()
         if worst > self.engine.kv.num_pages:
+            self._c_rejected.inc()
             raise AdmissionDenied(
                 f"request needs up to {worst} pages but the pool only has "
                 f"{self.engine.kv.num_pages}; it can never be admitted",
                 errno=Errno.ENOSPC)
         if worst > self.engine.max_pages:
+            self._c_rejected.inc()
             raise AdmissionDenied(
                 f"request needs up to {worst} pages but a sequence's block "
                 f"table holds at most {self.engine.max_pages}; it can "
                 "never decode to completion", errno=Errno.ENOSPC)
         req = Request(req_id=next(self._req_ids), prompt=list(prompt),
                       max_new_tokens=max_new_tokens, worst_pages=worst,
-                      hold_on_admit=hold)
+                      hold_on_admit=hold,
+                      submitted_ns=time.perf_counter_ns())
         self._requests[req.req_id] = req
         self._waiting.append(req)
         return req.req_id
@@ -166,6 +183,11 @@ class Scheduler:
             if req.hold_on_admit:
                 self._holds.add(req.seq)
             admitted.append(req.req_id)
+            self._c_admitted.inc()
+            self._h_admission_wait.observe(
+                (time.perf_counter_ns() - req.submitted_ns) / 1000.0)
+        if admitted:
+            self._g_reserved.set(self._pages_reserved())
         return admitted
 
     # ------------------------------------------------------------------
@@ -209,11 +231,13 @@ class Scheduler:
         """
         needed, budget = self._fork_cost(seq, n)
         if needed > budget:
+            self._c_forks_denied.inc()
             raise AdmissionDenied(
                 f"fork({seq}, n={n}) needs up to {needed} free "
                 f"pages, budget is {budget} (-EAGAIN)")
         child_cost = needed // n
         children = self.engine.fork(seq, n, eager_cow=eager_cow)
+        self._c_forks_admitted.inc(n)
         owner = self._seq_owner[seq]
         for c in children:
             self._seq_owner[c] = owner
@@ -224,6 +248,7 @@ class Scheduler:
                 self._holds.add(c)
             if seq in self._sampling:
                 self._sampling[c] = self._sampling[seq]
+        self._g_reserved.set(self._pages_reserved())
         return children
 
     # ------------------------------------------------------------------
@@ -303,7 +328,8 @@ class Scheduler:
 
     def _untrack(self, seq: int) -> None:
         rid = self._seq_owner.pop(seq, None)
-        self._reserved.pop(seq, None)
+        if self._reserved.pop(seq, None) is not None:
+            self._g_reserved.set(self._pages_reserved())
         self._holds.discard(seq)
         self._sampling.pop(seq, None)
         if rid is not None:
@@ -360,6 +386,8 @@ class Scheduler:
             self.engine.release(seq)
             self._seq_owner.pop(seq, None)
             self._reserved.pop(seq, None)
+            self._g_reserved.set(self._pages_reserved())
+            self._c_retired.inc()
         # a finished *branch* stays live: the agent decides commit/abort
 
     def step(self, *, greedy: bool = True, temperature: float = 1.0,
