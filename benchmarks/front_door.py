@@ -1,0 +1,195 @@
+"""Front-door load: the HTTP/SSE serving stack under mixed tenancy.
+
+A closed-loop generator drives a REAL socket server (the same code path
+``python -m repro.launch.serve --serve`` boots) with ≥64 concurrent
+client streams across 4 tenant classes:
+
+* ``vip`` (priority 3)  — chat, tight TTFT expectations;
+* ``pro`` (priority 2)  — best-of-N explorations;
+* ``batch`` (priority 1) — speculative decodes plus parked
+  reservation-holders (the preemption victims);
+* ``free`` (priority 1) — chat behind a 2-deep concurrency quota, so
+  the 429 path is exercised under load, not just in unit tests.
+
+Reported per tenant: p50/p99 time-to-first-token and tokens streamed;
+aggregate: client-observed tokens/s and requests/s.  The run asserts
+the serving invariants while measuring them — every stream terminates
+in ``finished``/``result``/``evicted`` (never an engine error, never a
+mid-decode ``-ENOSPC``), preemption only ever evicts parked or
+speculative work, and shutdown drains to an empty registry.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+
+STREAMS = 64          # concurrent client coroutines
+REQUESTS_EACH = 2     # closed-loop requests per stream
+MAX_NEW = 12
+
+
+def _build_front_door():
+    from repro.api import BranchSession
+    from repro.configs import get_config
+    from repro.models.model import Model
+    from repro.runtime.serve_loop import ServeEngine
+    from repro.server import FrontDoor, TenantConfig
+
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, num_pages=96, page_size=8,
+                         max_pages_per_seq=16)
+    session = BranchSession(engine, max_batch=16, seed=3)
+    return FrontDoor(session, [
+        TenantConfig("vip", max_concurrent=32, priority=3),
+        TenantConfig("pro", max_concurrent=32, priority=2),
+        TenantConfig("batch", max_concurrent=32, priority=1),
+        TenantConfig("free", max_concurrent=2, priority=1),
+    ])
+
+
+async def _one_request(client, tenant: str, kind: str, seed: int,
+                       out: Dict[str, List]) -> None:
+    """One closed-loop request; records TTFT and terminal event."""
+    import time
+
+    from repro.server import ServeError
+
+    prompt = [1 + (seed * 7 + i) % 400 for i in range(4)]
+    body = {"tenant": tenant, "prompt": prompt,
+            "max_new_tokens": MAX_NEW, "stream": True}
+    if kind == "chat":
+        path = "/v1/generate"
+    else:
+        path = "/v1/explore"
+        body["policy"] = kind
+        body["params"] = ({"n": 3, "tokens": 6} if kind == "best_of_n"
+                          else {"n_drafts": 2, "draft_tokens": 4})
+    for _attempt in range(1200):   # closed loop: retry 429s patiently
+        t0 = time.perf_counter()
+        ttft = None
+        terminal = None
+        tokens = 0
+        try:
+            async for event, data in client.stream("POST", path, body):
+                if event == "token":
+                    if ttft is None:
+                        ttft = time.perf_counter() - t0
+                    tokens += len(data.get("tokens", ()))
+                elif event == "response":   # non-SSE reply: an error doc
+                    status = data.get("status", 500)
+                    raise ServeError(status, data)
+                elif event in ("finished", "result", "evicted", "error"):
+                    terminal = event
+        except ServeError as err:
+            if err.status == 429:           # closed loop: retry later
+                out["quota_429"].append(tenant)
+                await asyncio.sleep(0.1)
+                continue
+            raise
+        out["terminal"].append((tenant, kind, terminal))
+        out["tokens"].append((tenant, tokens))
+        if ttft is not None:
+            out["ttft"].append((tenant, ttft))
+        return
+    out["terminal"].append((tenant, kind, "starved"))
+
+
+async def _load(fd) -> Tuple[Dict[str, List], float, int]:
+    import time
+
+    from repro.server import ServeClient
+
+    server = await fd.serve("127.0.0.1", 0)
+    port = server.sockets[0].getsockname()[1]
+    client = ServeClient(f"127.0.0.1:{port}")
+
+    # parked reservation-holders: what preemption will reclaim
+    held = []
+    for i in range(4):
+        r = await client.hold([2, 3, 5, 7], tenant="batch",
+                              max_new_tokens=MAX_NEW)
+        held.append(r["id"])
+
+    plan: List[Tuple[str, str]] = []
+    for i in range(STREAMS):
+        if i % 4 == 0:
+            plan.append(("vip", "chat"))
+        elif i % 4 == 1:
+            plan.append(("pro", "best_of_n"))
+        elif i % 4 == 2:
+            plan.append(("batch", "speculative"))
+        else:
+            plan.append(("free", "chat"))
+
+    out: Dict[str, List] = {"ttft": [], "tokens": [], "terminal": [],
+                            "quota_429": []}
+
+    async def stream_worker(idx: int, tenant: str, kind: str) -> None:
+        for r in range(REQUESTS_EACH):
+            await _one_request(client, tenant, kind, idx * 31 + r, out)
+
+    t0 = time.perf_counter()
+    await asyncio.gather(*(stream_worker(i, t, k)
+                           for i, (t, k) in enumerate(plan)))
+    elapsed = time.perf_counter() - t0
+
+    # the held reservations may have been preempted; whatever survived
+    # is evicted by the graceful drain — registry must end empty
+    stats = await fd.shutdown(drain=True, timeout=120)
+    leftover = len(fd.registry.live)
+    if leftover:
+        raise AssertionError(
+            f"drain left {leftover} live records ({stats})")
+    return out, elapsed, len(held)
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def run():
+    fd = _build_front_door()
+    out, elapsed, n_held = asyncio.run(_load(fd))
+
+    bad = [t for t in out["terminal"] if t[2] in ("error", "starved", None)]
+    if bad:
+        raise AssertionError(f"streams did not finish cleanly: {bad[:5]}")
+    # preemption victims must be held/speculative only: chat and
+    # best_of_n streams may never see an eviction
+    evicted_kinds = {kind for _, kind, term in out["terminal"]
+                     if term == "evicted"}
+    if evicted_kinds - {"speculative"}:
+        raise AssertionError(
+            f"non-preemptible work was evicted: {evicted_kinds}")
+
+    snap = fd.session.obs.metrics.snapshot()
+    counters = snap.get("counters", {})
+
+    total_tokens = sum(n for _, n in out["tokens"])
+    yield ("streams", float(STREAMS), f"{REQUESTS_EACH} req each")
+    yield ("tokens_per_s", total_tokens / max(elapsed, 1e-9),
+           f"{total_tokens} tokens over {elapsed:.1f}s, one engine")
+    yield ("requests_per_s", len(out["terminal"]) / max(elapsed, 1e-9),
+           f"{len(out['terminal'])} streams completed")
+    tenants = sorted({t for t, _ in out["ttft"]})
+    for tenant in tenants:
+        ts = [x * 1e6 for t, x in out["ttft"] if t == tenant]
+        toks = sum(n for t, n in out["tokens"] if t == tenant)
+        yield (f"{tenant}_ttft_p50_us", _pct(ts, 0.50),
+               f"n={len(ts)} first-token latencies")
+        yield (f"{tenant}_ttft_p99_us", _pct(ts, 0.99),
+               f"{toks} tokens streamed")
+    yield ("quota_429", float(len(out["quota_429"])),
+           "closed-loop retries (free tenant, quota 2)")
+    yield ("preemptions", float(counters.get("server.preemptions", 0)),
+           f"victims among {n_held} parked + speculative drafts")
+    yield ("clean_drain", 1.0, "registry empty after graceful shutdown")

@@ -14,6 +14,7 @@ so the perf trajectory is tracked across PRs.  Tables:
   exploration policies    -> explore_policies
   decode fast path        -> decode_step
   fused spec verify       -> spec_verify
+  HTTP/SSE front door     -> front_door
 
 ``--compare <baseline.json>`` checks the run against a committed
 baseline and fails on a >20% drop of any throughput-like row
@@ -93,6 +94,7 @@ def main(argv=None) -> None:
         explore_bench,
         explore_policies,
         fork_fanout,
+        front_door,
         kvbranch_bench,
         serve_throughput,
         shard_serve,
@@ -112,6 +114,7 @@ def main(argv=None) -> None:
         ("explore_policies", explore_policies),
         ("decode_step", decode_step),
         ("spec_verify", spec_verify),
+        ("front_door", front_door),
     ]
     if args.only:
         keep = set(args.only.split(","))

@@ -16,6 +16,12 @@ Run:  PYTHONPATH=src python examples/agentic_serve.py
 one-screen metrics summary, and writes a Chrome/Perfetto timeline —
 open it at https://ui.perfetto.dev to see the fork/explore/commit story
 as one row per branch.
+
+``--client http://host:port`` drives the SAME workload over HTTP
+against a running front door (``python -m repro.launch.serve --serve
+host:port``) instead of building an in-process engine: each exploration
+becomes a ``POST /v1/explore`` SSE stream, and the three searches still
+share one engine's continuous batch — server-side.
 """
 
 import argparse
@@ -31,12 +37,59 @@ from repro.obs import Observability
 from repro.runtime.serve_loop import ServeEngine
 
 
+def run_client(url: str) -> None:
+    """The same three concurrent searches, over the HTTP front door."""
+    import asyncio
+
+    from repro.server import ServeClient
+
+    client = ServeClient(url)
+
+    async def drive() -> None:
+        health = await client.health()
+        print(f"server: {health}")
+        beam, beam2, tree = await asyncio.gather(
+            client.explore([7, 3, 9, 21, 14, 2], policy="beam",
+                           max_new_tokens=13,
+                           params={"width": 3, "depth": 3,
+                                   "tokens_per_level": 4,
+                                   "temperature": 2.0}),
+            client.explore([4, 8, 15, 16, 23, 42], policy="beam",
+                           max_new_tokens=13,
+                           params={"width": 3, "depth": 3,
+                                   "tokens_per_level": 4,
+                                   "temperature": 2.0}),
+            client.explore([5, 10, 20], policy="tree", max_new_tokens=17,
+                           params={"fan_out": 3, "max_nodes": 9,
+                                   "tokens_per_node": 4, "max_depth": 3,
+                                   "temperature": 2.0}),
+        )
+        for name, fin in (("beam", beam), ("beam2", beam2),
+                          ("tree", tree)):
+            if fin["event"] != "result":
+                print(f"{name}: {fin['event']} — {fin}")
+                continue
+            print(f"{name}: final sequence {fin['tokens']}")
+        metrics = await client.metrics()
+        served = [ln for ln in metrics.splitlines() if "server." in ln]
+        print("server metrics:\n  " + "\n  ".join(served))
+
+    asyncio.run(drive())
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a Chrome/Perfetto trace.json on exit and "
                          "print the metrics summary")
+    ap.add_argument("--client", default=None, metavar="URL",
+                    help="drive a running front door over HTTP instead "
+                         "of building an in-process engine")
     args = ap.parse_args(argv)
+
+    if args.client:
+        run_client(args.client)
+        return
 
     cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
     model = Model(cfg, attn_chunk=8, remat=False)

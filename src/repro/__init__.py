@@ -16,6 +16,8 @@ Exploration* (CS.OS 2026) as a production training/serving framework:
 * :mod:`repro.runtime`   — fault-tolerant training, branchable serving.
 * :mod:`repro.explore_ctx` — exploration policies (best-of-N, beam,
   tree search, speculative decode) as sugar over ``repro.api``.
+* :mod:`repro.server`    — multi-tenant async HTTP/SSE front door
+  (quotas, priority preemption, one engine loop for every tenant).
 * :mod:`repro.launch`    — production meshes, multi-pod dry-run,
   roofline analysis.
 
@@ -46,6 +48,7 @@ __all__ = [
     "obs",
     "optim",
     "runtime",
+    "server",
 ]
 
 

@@ -115,12 +115,20 @@ class Waiter:
         Returns the ready map — possibly empty if ``timeout_steps``
         scheduler rounds elapse first, mirroring ``epoll_wait``'s
         0-return on timeout rather than raising.
+
+        ``session.close()`` wakes every blocked waiter: a closed
+        session cannot make further progress, so the wait returns the
+        ready-set-so-far immediately instead of stepping a drained
+        scheduler until the timeout — the unblock path a serving front
+        door's graceful shutdown relies on.
         """
         for _ in range(max(timeout_steps, 1)):
             ready = self.poll()
             if ready and (not require_all
                           or len(ready) == len(self._interest)):
                 return ready
+            if self.session.closed:
+                return ready   # woken by close(): report what fired
             self.session.step(**decode_kw)
         return self.poll()
 

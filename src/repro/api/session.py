@@ -143,6 +143,7 @@ class BranchSession:
         self._slots: List[Optional[_Entry]] = []
         self._gens: List[int] = []     # per-slot generation counters
         self._free: List[int] = []
+        self._closed = False
 
     # ------------------------------------------------------------------
     # handle table
@@ -171,18 +172,35 @@ class BranchSession:
                 f"{'closed' if entry is None else 'reused'} (-EBADF)")
         return entry
 
-    def close(self, hd: int) -> None:
+    def close(self, hd: Optional[int] = None) -> None:
         """Free a handle slot; any later use of ``hd`` is ``-EBADF``.
 
         Closing never resolves the branch (mirror of ``close(2)`` not
         killing the process an fd pointed at) — commit/abort/finish
         first if the branch should not stay live.
+
+        ``close()`` with **no handle** closes the *session*: no new
+        requests are accepted (``open`` raises ``-EINVAL``), ``step``
+        becomes a no-op, and every blocked :class:`~repro.api.events.
+        Waiter` (and therefore ``session.wait``) wakes on its next poll
+        instead of stepping a drained scheduler forever — the wake/
+        close path a serving front door needs for graceful shutdown.
+        Idempotent; existing handles stay readable (``tokens``,
+        ``stat``) so late readers can still collect results.
         """
+        if hd is None:
+            self._closed = True
+            return
         entry = self._entry(hd)
         idx = hd >> _GEN_BITS
         self._slots[idx] = None
         self._gens[idx] = (entry.gen + 1) & _GEN_MASK or 1
         self._free.append(idx)
+
+    @property
+    def closed(self) -> bool:
+        """Whether ``close()`` shut the session down (no more stepping)."""
+        return self._closed
 
     def open_handles(self) -> List[int]:
         return [e.hd for e in self._slots if e is not None]
@@ -202,6 +220,9 @@ class BranchSession:
         so an exploration policy sees exactly the prompt — never a
         scheduler-paced token.
         """
+        if self._closed:
+            raise BranchStateError(
+                "session is closed; no new requests (-EINVAL)")
         req_id = self.sched.submit(list(prompt), max_new_tokens,
                                    hold=bool(flags & BR_HOLD))
         entry = self._new_entry(req_id=req_id, root_hd=0,
@@ -244,6 +265,8 @@ class BranchSession:
 
     def admit(self) -> List[int]:
         """Run one admission round (``wait``/``step`` do this for you)."""
+        if self._closed:
+            return []
         return self.sched.admit()
 
     # ------------------------------------------------------------------
@@ -637,7 +660,15 @@ class BranchSession:
         return self.sched.tp
 
     def step(self, **decode_kw: Any) -> Dict[str, Any]:
-        """One scheduling round (admission, batched decode, retirement)."""
+        """One scheduling round (admission, batched decode, retirement).
+
+        A closed session never steps: the call returns an idle record
+        (``closed=True``) so retry loops observe zero progress and
+        unwind instead of decoding against a shutting-down engine.
+        """
+        if self._closed:
+            return {"admitted": 0, "batch": 0, "decoded": 0, "retired": 0,
+                    "waiting": 0, "running": 0, "closed": True}
         return self.sched.step(**decode_kw)
 
     def finish(self, hd: int) -> Optional[List[int]]:

@@ -225,6 +225,11 @@ class ExplorationDriver:
         return self.launch(wrapper(), name=name or getattr(
             policy, "__name__", "policy"))
 
+    @property
+    def live(self) -> List[Exploration]:
+        """Unresolved explorations (read-only view for external loops)."""
+        return list(self._live)
+
     def _bind_root(self, req_id: int,
                    seq: Optional[int] = None) -> BranchContext:
         """Wrap an externally submitted request in a root context
@@ -427,8 +432,20 @@ class ExplorationDriver:
                         raise exp.error
         return self.explorations
 
+    def kick_stalled(self) -> int:
+        """Throw -EAGAIN into ONE fork-blocked policy on a proven stall.
+
+        Public for external continuous loops (the serving front door's
+        engine multiplexer owns its own stepping loop instead of
+        :meth:`run`, but needs the same escape hatch when a round makes
+        no progress and a fork-blocked policy is the reason): the kicked
+        policy may shrink its fan-out or degrade to unforked decoding,
+        freeing pages for everyone else.  Returns 1 if a policy was
+        kicked, else 0.
+        """
+        return self._kick_stalled()
+
     def _kick_stalled(self) -> int:
-        """Throw -EAGAIN into ONE fork-blocked policy on a proven stall."""
         for exp in list(self._live):
             if isinstance(exp.wait, _WaitFork):
                 wait, exp.wait = exp.wait, None

@@ -14,6 +14,16 @@ serving mesh (DESIGN §11) — weights and KV pages shard, branch
 bookkeeping stays host-side, and the served tokens are identical to
 ``--tp 1`` for the same seed.  On a CPU-only host, force devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``--serve host:port`` starts the multi-tenant HTTP/SSE front door
+(DESIGN §14) instead of the demo: one engine loop serves every tenant's
+``/v1/generate`` and ``/v1/explore`` traffic until SIGINT/SIGTERM, then
+drains gracefully (in-flight decodes finish; parked reservations are
+evicted) and exits 0.  ``--tenants name:max_concurrent:priority,...``
+registers tenant classes::
+
+    python -m repro.launch.serve --serve 127.0.0.1:8777 \\
+        --tenants vip:16:3,batch:32:1
 """
 
 from __future__ import annotations
@@ -40,6 +50,16 @@ def main(argv=None) -> int:
                     help="record per-branch lifecycle spans and write a "
                          "Chrome/Perfetto trace.json here on exit "
                          "(also prints the one-screen metrics summary)")
+    ap.add_argument("--serve", default=None, metavar="HOST:PORT",
+                    help="run the multi-tenant HTTP/SSE front door "
+                         "instead of the demo (SIGINT/SIGTERM drains "
+                         "gracefully)")
+    ap.add_argument("--tenants", default=None,
+                    metavar="NAME:MAX_CONCURRENT:PRIORITY,...",
+                    help="tenant classes for --serve (unknown tenants "
+                         "get the default class)")
+    ap.add_argument("--num-pages", type=int, default=1024,
+                    help="KV page-pool size (default 1024)")
     args = ap.parse_args(argv)
 
     from repro.api import BranchSession
@@ -55,13 +75,15 @@ def main(argv=None) -> int:
     cfg = dataclasses.replace(cfg, dtype="float32")
     model = Model(cfg, attn_chunk=8, remat=False)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, num_pages=1024, page_size=8,
-                         max_pages_per_seq=64, tp=args.tp,
+    engine = ServeEngine(model, params, num_pages=args.num_pages,
+                         page_size=8, max_pages_per_seq=64, tp=args.tp,
                          obs=Observability(trace=args.trace is not None))
     session = BranchSession(engine, max_batch=args.max_batch, seed=1)
     if session.tp > 1:
         print(f"serving mesh: tp={session.tp} over "
               f"{len(jax.devices())} devices")
+    if args.serve:
+        return _serve_front_door(session, args)
     driver = ExplorationDriver(session)
 
     prompts = {}
@@ -94,6 +116,57 @@ def main(argv=None) -> int:
     if args.trace:
         session.trace(args.trace)
         print(f"wrote {args.trace} — open at https://ui.perfetto.dev")
+    return 0
+
+
+def _parse_tenants(spec):
+    """``name:max_concurrent:priority,...`` → TenantConfig list."""
+    from repro.server import TenantConfig
+
+    out = []
+    for part in (spec or "").split(","):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        name = fields[0]
+        max_conc = int(fields[1]) if len(fields) > 1 else 16
+        priority = int(fields[2]) if len(fields) > 2 else 1
+        out.append(TenantConfig(name, max_concurrent=max_conc,
+                                priority=priority))
+    return out
+
+
+def _serve_front_door(session, args) -> int:
+    import asyncio
+    import signal
+
+    from repro.server import FrontDoor
+
+    host, _, port = args.serve.rpartition(":")
+    host = host or "127.0.0.1"
+    fd = FrontDoor(session, _parse_tenants(args.tenants))
+
+    async def run() -> None:
+        server = await fd.serve(host, int(port))
+        addr = server.sockets[0].getsockname()
+        print(f"serving on http://{addr[0]}:{addr[1]} "
+              f"(tenants: {[t.name for t in fd.tenancy.tenants()]})",
+              flush=True)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            loop.add_signal_handler(sig, stop.set)
+        await stop.wait()
+        print("draining...", flush=True)
+        stats = await fd.shutdown(drain=True)
+        print(f"drained cleanly ({stats['evicted']} parked/stale "
+              "evicted)", flush=True)
+        if args.trace:
+            session.trace(args.trace)
+            print(f"wrote {args.trace}", flush=True)
+
+    asyncio.run(run())
     return 0
 
 

@@ -305,6 +305,27 @@ class Scheduler:
         rid = self._seq_owner.get(seq)
         return None if rid is None else self._requests.get(rid)
 
+    def waiting_head(self) -> Optional[Request]:
+        """The admission FIFO's head request (None when the queue is
+        empty).  Admission is strictly FIFO, so the head is the *only*
+        request whose reservation shortfall matters — a tenancy layer
+        relieving page pressure (preempting held/speculative branches)
+        targets exactly this request's deficit."""
+        return self._waiting[0] if self._waiting else None
+
+    def admission_deficit(self) -> int:
+        """Pages the FIFO head still lacks (0 when it fits or no queue).
+
+        ``worst_pages(head) - (pool - reserved)``, clamped at 0: how
+        many pages preemption must recycle before the next ``admit()``
+        round can seat the head request.
+        """
+        head = self.waiting_head()
+        if head is None:
+            return 0
+        budget = self.engine.kv.num_pages - self._pages_reserved()
+        return max(0, head.worst_pages - budget)
+
     def peek_result(self, req_id: int) -> Optional[List[int]]:
         """A finished request's tokens without claiming them (None while
         pending or after the one-shot :meth:`result` claim)."""

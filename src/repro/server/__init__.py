@@ -1,0 +1,31 @@
+"""repro.server — the multi-tenant async serving front door.
+
+HTTP/SSE over a :class:`~repro.api.BranchSession`: one background
+engine loop folds every tenant's branches into one continuous batch
+(:mod:`~repro.server.multiplex`), per-tenant quotas and priority-based
+preemption layer policy on the scheduler's reservation ledger
+(:mod:`~repro.server.tenancy`), and a zero-dependency asyncio HTTP/1.1
+app exposes generate/explore/tree/metrics (:mod:`~repro.server.app`).
+See DESIGN.md §14.
+"""
+
+from repro.server.app import POLICIES, FrontDoor, Response
+from repro.server.client import ServeClient, ServeError
+from repro.server.multiplex import EngineLoop, Registry, chat_policy
+from repro.server.tenancy import (QuotaExceeded, ServedRequest,
+                                  TenancyManager, TenantConfig)
+
+__all__ = [
+    "EngineLoop",
+    "FrontDoor",
+    "POLICIES",
+    "QuotaExceeded",
+    "Registry",
+    "Response",
+    "ServeClient",
+    "ServeError",
+    "ServedRequest",
+    "TenancyManager",
+    "TenantConfig",
+    "chat_policy",
+]

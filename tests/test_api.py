@@ -348,3 +348,57 @@ def test_introspection_stat_and_tree(engine_setup):
     assert len(root_node["children"]) == 2
     assert "frozen" == root_node["status"]
     assert s.format_tree()               # renders without crashing
+
+
+# ---------------------------------------------------------------------------
+# session close: the graceful-shutdown wake path
+# ---------------------------------------------------------------------------
+
+def test_session_close_wakes_blocked_waiter(engine_setup):
+    import threading
+    import time
+
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)   # held: it will never decode
+    out = {}
+
+    def blocked():
+        w = Waiter(s).add(root, EV_FINISHED)
+        t0 = time.perf_counter()
+        out["ready"] = w.wait(timeout_steps=10_000_000)
+        out["elapsed"] = time.perf_counter() - t0
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    time.sleep(0.2)                        # let it block in wait()
+    s.close()                              # no handle: close the SESSION
+    t.join(timeout=30)
+    assert not t.is_alive(), "close() must wake a blocked Waiter.wait"
+    assert out["ready"] == {}              # nothing fired; woken by close
+    assert out["elapsed"] < 30
+
+    # a closed session refuses new work but keeps handles readable
+    assert s.closed
+    with pytest.raises(BranchStateError):
+        s.open([1, 2], 4)
+    assert s.tokens(root)[:3] == [1, 2, 3]
+    assert s.step()["closed"] is True      # stepping is a no-op record
+
+
+def test_session_wait_sugar_wakes_on_close(engine_setup):
+    import threading
+    import time
+
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+
+    def close_soon():
+        time.sleep(0.2)
+        s.close()
+
+    t = threading.Thread(target=close_soon)
+    t.start()
+    ready = s.wait([root], events=EV_FINISHED,
+                   timeout_steps=10_000_000)
+    t.join(timeout=30)
+    assert ready == {}                     # returned early, not by timeout
