@@ -1,0 +1,47 @@
+"""branchlint self-hosting cost — the analyzer's own wall-clock.
+
+The lint-smoke CI job runs ``python -m repro.analysis src tests`` on
+every push; this module keeps that cost on the BENCH trajectory so a
+rule whose path simulation goes super-linear (BL002/BL004 ride the
+``cfg`` simulator, whose state sets are capped but not free) shows up
+as a throughput regression, not as mysteriously slower CI.
+
+Rows:
+* ``selfhost_wall_us`` — one full ``analyze_paths(["src"])`` pass;
+* ``files_per_s`` — analysis throughput (the ``--compare`` gate row);
+* ``cfg_rules_wall_us`` — the two path-sensitive rules alone, the
+  part that could plausibly blow up.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import List, Tuple
+
+
+def _wall_us(fn, trials: int = 3) -> float:
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(times)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    from repro.analysis import analyze_paths
+
+    result = analyze_paths(["src"])     # warm (imports, pyc)
+    files = max(result.files_checked, 1)
+
+    full_us = _wall_us(lambda: analyze_paths(["src"]))
+    cfg_us = _wall_us(
+        lambda: analyze_paths(["src"], rules=["BL002", "BL004"]))
+
+    return [
+        ("selfhost_wall_us", full_us,
+         f"{files} files, {len(result.findings)} findings"),
+        ("files_per_s", files / (full_us / 1e6), "analysis throughput"),
+        ("cfg_rules_wall_us", cfg_us, "BL002+BL004 path simulation"),
+    ]

@@ -15,6 +15,7 @@ so the perf trajectory is tracked across PRs.  Tables:
   decode fast path        -> decode_step
   fused spec verify       -> spec_verify
   HTTP/SSE front door     -> front_door
+  branchlint self-host    -> lint_selfhost
 
 ``--compare <baseline.json>`` checks the run against a committed
 baseline and fails on a >20% drop of any throughput-like row
@@ -96,6 +97,7 @@ def main(argv=None) -> None:
         fork_fanout,
         front_door,
         kvbranch_bench,
+        lint_selfhost,
         serve_throughput,
         shard_serve,
         spec_verify,
@@ -115,6 +117,7 @@ def main(argv=None) -> None:
         ("decode_step", decode_step),
         ("spec_verify", spec_verify),
         ("front_door", front_door),
+        ("lint_selfhost", lint_selfhost),
     ]
     if args.only:
         keep = set(args.only.split(","))

@@ -20,6 +20,9 @@ Exploration* (CS.OS 2026) as a production training/serving framework:
   (quotas, priority preemption, one engine loop for every tenant).
 * :mod:`repro.launch`    — production meshes, multi-pod dry-run,
   roofline analysis.
+* :mod:`repro.analysis`  — branchlint, the self-hosted protocol
+  checker (errno discipline, handle lifecycle, thread boundary, span
+  balance, metric hygiene, flag validity).
 
 Submodules are imported lazily (PEP 562) so ``import repro`` stays
 cheap; ``__all__`` below is exactly the documented public surface, and
@@ -34,6 +37,7 @@ __version__ = "1.1.0"
 #: the documented public namespace — everything here imports cleanly
 __all__ = [
     "__version__",
+    "analysis",
     "api",
     "checkpoint",
     "configs",

@@ -1,0 +1,42 @@
+"""branchlint — the repo's self-hosted branch-context protocol checker.
+
+Static analysis for the invariants the rest of the codebase promises
+but Python cannot express: errno discipline on error surfaces (BL001),
+handle lifecycle (BL002), the asyncio/engine thread boundary (BL003),
+span balance (BL004), metric hygiene (BL005), and flag-word validity
+(BL006).  Stdlib-only (``ast`` + ``re`` + ``json``).
+
+Run it::
+
+    python -m repro.analysis src tests
+    python -m repro.analysis --format json --baseline .branchlint-baseline.json src
+
+Library surface::
+
+    from repro.analysis import RULES, analyze_paths
+    result = analyze_paths(["src"])
+"""
+
+from repro.analysis.engine import (BASELINE_DEFAULT, AnalysisResult,
+                                   FileContext, Finding, Project, Rule,
+                                   RULES, analyze_paths, apply_baseline,
+                                   load_baseline, register, render_json,
+                                   render_text, write_baseline)
+import repro.analysis.rules  # noqa: F401  (populates RULES)
+
+__all__ = [
+    "AnalysisResult",
+    "BASELINE_DEFAULT",
+    "FileContext",
+    "Finding",
+    "Project",
+    "RULES",
+    "Rule",
+    "analyze_paths",
+    "apply_baseline",
+    "load_baseline",
+    "register",
+    "render_json",
+    "render_text",
+    "write_baseline",
+]

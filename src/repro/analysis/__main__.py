@@ -1,0 +1,98 @@
+"""branchlint CLI — ``python -m repro.analysis [options] paths...``
+
+Exit status is the contract CI builds on: 0 when every finding is
+suppressed or baselined, 1 when new findings exist (or a path failed
+to parse), 2 on usage errors.
+
+    python -m repro.analysis src tests
+    python -m repro.analysis --format json src > lint.json
+    python -m repro.analysis --baseline .branchlint-baseline.json src
+    python -m repro.analysis --write-baseline .branchlint-baseline.json src
+    python -m repro.analysis --rules BL001,BL004 src
+
+When ``--baseline`` is not given and ``.branchlint-baseline.json``
+exists in the working directory, it is used automatically — so local
+runs and CI agree by default.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import (BASELINE_DEFAULT, RULES, analyze_paths,
+                            apply_baseline, load_baseline, render_json,
+                            render_text, write_baseline)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="branchlint: the branch-context protocol checker")
+    p.add_argument("paths", nargs="+",
+                   help="files or directories to analyze")
+    p.add_argument("--format", choices=("text", "json"), default="text",
+                   help="output format (default: text)")
+    p.add_argument("--baseline", type=Path, default=None, metavar="FILE",
+                   help="accepted-findings file; new findings only fail "
+                        f"(default: {BASELINE_DEFAULT} if present)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any baseline file, report everything")
+    p.add_argument("--write-baseline", type=Path, default=None,
+                   metavar="FILE",
+                   help="write current findings as the new baseline "
+                        "and exit 0")
+    p.add_argument("--rules", default=None, metavar="CODES",
+                   help="comma-separated rule codes to run "
+                        f"(default: all of {','.join(sorted(RULES))})")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    rules: Optional[List[str]] = None
+    if args.rules:
+        rules = [c.strip().upper() for c in args.rules.split(",")
+                 if c.strip()]
+        unknown = [c for c in rules if c not in RULES]
+        if unknown:
+            print(f"unknown rule code(s): {', '.join(unknown)} "
+                  f"(known: {', '.join(sorted(RULES))})", file=sys.stderr)
+            return 2
+
+    result = analyze_paths(args.paths, rules=rules)
+
+    if args.write_baseline is not None:
+        write_baseline(result.findings, args.write_baseline)
+        print(f"wrote {len(result.findings)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline_path = args.baseline
+    if baseline_path is None and not args.no_baseline and \
+            BASELINE_DEFAULT.exists():
+        baseline_path = BASELINE_DEFAULT
+    if args.no_baseline:
+        baseline_path = None
+
+    if baseline_path is not None:
+        try:
+            entries = load_baseline(baseline_path)
+        except (OSError, ValueError) as err:
+            print(f"cannot read baseline {baseline_path}: {err}",
+                  file=sys.stderr)
+            return 2
+        new, absorbed = apply_baseline(result.findings, entries)
+    else:
+        new, absorbed = list(result.findings), 0
+
+    render = render_json if args.format == "json" else render_text
+    print(render(result, new, absorbed))
+    return 1 if (new or result.parse_errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,203 @@
+"""A small path-sensitive statement simulator for the CFG rules.
+
+BL002 (handle lifecycle) and BL004 (span balance) are *path* properties
+— "on every path from acquisition to an exit, the resource is released"
+— so a flat AST walk cannot express them.  This module simulates a
+function body over sets of abstract states:
+
+* a **state** is whatever immutable fact-set a rule chooses
+  (``frozenset`` of strings here: ``{"held:hd"}``, ``{"open:1"}``);
+* the rule supplies one ``transfer(node, state) -> iterable[state]``
+  callback, invoked on simple statements and on the expression parts of
+  control statements (``If.test``, ``While.test``, ``For.iter``,
+  ``Return``/``Raise`` nodes themselves, ``with`` items);
+* the simulator owns the control flow: both arms of an ``if``, loop
+  bodies executed 0/1/2 times (twice, so a second release inside a loop
+  is observable), ``try`` handlers entered with the state at try entry
+  (an exception may fire before any body statement completed),
+  ``finally`` applied to normal *and* escaping paths, and every
+  ``return``/``raise``/fall-through recorded as an :class:`ExitPath`.
+
+The approximations are deliberate and conservative-for-our-rules:
+conditions are never evaluated (both arms always explored), implicit
+exceptions from arbitrary calls are not modeled (only explicit
+``raise``), and nested function bodies are opaque (the rule's transfer
+sees the ``FunctionDef`` node and decides what escapes into it).
+State-set size is capped so pathological functions stay linear.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, FrozenSet, Iterable, List, Set
+
+State = FrozenSet[str]
+Transfer = Callable[[ast.AST, State], Iterable[State]]
+
+#: cap on simultaneously tracked states per block (join beyond this)
+MAX_STATES = 128
+
+
+@dataclass
+class ExitPath:
+    """One way control leaves the simulated body."""
+
+    state: State
+    node: ast.AST          # the Return/Raise (or body) anchoring the exit
+    kind: str              # "return" | "raise" | "fall"
+
+
+class _Paths:
+    """Mutable simulation context: collected exits + loop break states."""
+
+    def __init__(self, transfer: Transfer):
+        self.transfer = transfer
+        self.exits: List[ExitPath] = []
+        self._breaks: List[Set[State]] = []
+
+
+def simulate(body: List[ast.stmt], init: State,
+             transfer: Transfer) -> List[ExitPath]:
+    """Run ``body`` from ``init``; return every exit path (fall-through
+    off the end included, anchored at the last statement)."""
+    ctx = _Paths(transfer)
+    out = _block(body, {init}, ctx)
+    anchor = body[-1] if body else ast.Pass()
+    for state in out:
+        ctx.exits.append(ExitPath(state, anchor, "fall"))
+    return ctx.exits
+
+
+def _cap(states: Set[State]) -> Set[State]:
+    if len(states) <= MAX_STATES:
+        return states
+    # join everything into one superset state: keeps "a fact held on
+    # some path" observable while bounding the walk
+    merged: Set[str] = set()
+    for s in states:
+        merged |= s
+    return {frozenset(merged)}
+
+
+def _apply(node: ast.AST, states: Set[State], ctx: _Paths) -> Set[State]:
+    out: Set[State] = set()
+    for s in states:
+        out.update(ctx.transfer(node, s))
+    return _cap(out)
+
+
+def _block(stmts: List[ast.stmt], states: Set[State],
+           ctx: _Paths) -> Set[State]:
+    for stmt in stmts:
+        if not states:
+            return states          # all paths already exited
+        states = _stmt(stmt, states, ctx)
+    return states
+
+
+def _stmt(stmt: ast.stmt, states: Set[State], ctx: _Paths) -> Set[State]:
+    if isinstance(stmt, ast.If):
+        states = _apply(stmt.test, states, ctx)
+        return _block(stmt.body, set(states), ctx) \
+            | _block(stmt.orelse, set(states), ctx)
+
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        states = _apply(stmt.iter, states, ctx)
+        states = _apply(stmt.target, states, ctx)
+        return _loop(stmt.body, stmt.orelse, states, ctx)
+
+    if isinstance(stmt, ast.While):
+        states = _apply(stmt.test, states, ctx)
+        return _loop(stmt.body, stmt.orelse, states, ctx)
+
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        for item in stmt.items:
+            states = _apply(item, states, ctx)
+        return _block(stmt.body, states, ctx)
+
+    if isinstance(stmt, ast.Try):
+        return _try(stmt, states, ctx)
+
+    if isinstance(stmt, ast.Return):
+        states = _apply(stmt, states, ctx)
+        for s in states:
+            ctx.exits.append(ExitPath(s, stmt, "return"))
+        return set()
+
+    if isinstance(stmt, ast.Raise):
+        states = _apply(stmt, states, ctx)
+        for s in states:
+            ctx.exits.append(ExitPath(s, stmt, "raise"))
+        return set()
+
+    if isinstance(stmt, (ast.Break, ast.Continue)):
+        if ctx._breaks:
+            ctx._breaks[-1].update(states)
+        return set()
+
+    if isinstance(stmt, ast.Match):
+        out: Set[State] = set()
+        fell_through = True
+        for case in stmt.cases:
+            out |= _block(case.body, set(states), ctx)
+            if case.pattern is not None and \
+                    isinstance(case.pattern, ast.MatchAs) and \
+                    case.pattern.pattern is None and case.guard is None:
+                fell_through = False   # a catch-all case exists
+        if fell_through:
+            out |= states
+        return _cap(out)
+
+    # simple statement (incl. nested FunctionDef/ClassDef, which the
+    # transfer may inspect for escapes but whose bodies are opaque)
+    return _apply(stmt, states, ctx)
+
+
+def _loop(body: List[ast.stmt], orelse: List[ast.stmt],
+          states: Set[State], ctx: _Paths) -> Set[State]:
+    ctx._breaks.append(set())
+    once = _block(body, set(states), ctx)
+    twice = _block(body, set(once), ctx)
+    broke = ctx._breaks.pop()
+    out = states | once | twice | broke          # 0, 1, or 2 iterations
+    if orelse:
+        out = _block(orelse, _cap(out), ctx)
+    return _cap(out)
+
+
+def _try(stmt: ast.Try, states: Set[State], ctx: _Paths) -> Set[State]:
+    # exits raised inside the protected region must pass through finally
+    outer_exits = ctx.exits
+    ctx.exits = []
+    body_out = _block(stmt.body, set(states), ctx)
+    # an exception may interrupt the body anywhere: handlers see the
+    # state at try entry OR at body completion (conservative union)
+    handler_in = _cap(set(states) | body_out)
+    handler_out: Set[State] = set()
+    for handler in stmt.handlers:
+        handler_out |= _block(handler.body, set(handler_in), ctx)
+    orelse_out = _block(stmt.orelse, body_out, ctx) if stmt.orelse \
+        else body_out
+    normal = _cap(orelse_out | handler_out)
+    captured, ctx.exits = ctx.exits, outer_exits
+    if stmt.finalbody:
+        normal = _block(stmt.finalbody, normal, ctx)
+        for ex in captured:
+            fin_out = _block(stmt.finalbody, {ex.state}, ctx)
+            for s in fin_out:
+                ctx.exits.append(ExitPath(s, ex.node, ex.kind))
+    else:
+        ctx.exits.extend(captured)
+    return normal
+
+
+def walk_expr_names(node: ast.AST) -> Iterable[ast.Name]:
+    """Every Name node in an expression subtree (helper for transfers)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub
+
+
+__all__ = ["ExitPath", "MAX_STATES", "State", "simulate",
+           "walk_expr_names"]

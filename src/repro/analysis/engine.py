@@ -1,0 +1,299 @@
+"""branchlint engine — findings, rule registry, suppressions, baseline.
+
+The protocol checker's chassis.  Rules (``rules/``) are small AST
+visitors registered by errno-style code (``BL001``..); the engine owns
+everything around them:
+
+* **Findings** are ``file:line:col  CODE  message`` records, stable
+  enough to diff across runs: the baseline matches on
+  ``(file, rule, source-line content)`` so unrelated edits above a
+  baselined finding do not un-baseline it.
+* **Suppressions** are per-line: ``# branchlint: ignore[BL002]`` on the
+  offending line (or on a comment line directly above it) silences the
+  listed rules; ``# branchlint: ignore`` silences every rule for that
+  line.  Suppressions are for *false* positives — true positives get
+  fixed, per the policy in DESIGN §15.
+* **The baseline** (``.branchlint-baseline.json``) holds accepted
+  pre-existing findings so CI can fail on *new* findings only.  An
+  empty baseline is the healthy state; entries are debt.
+
+Self-hosting is the point: ``python -m repro.analysis src`` must exit 0
+on this repository, and the rules encode invariants the rest of the
+codebase already promises (errno discipline, handle lifecycle, the
+engine-thread boundary, span balance, metric grammar, flag validity).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: suppression comment grammar — "branchlint: ignore" after a hash,
+#: optionally followed by a [BL001,BL004]-style rule list
+_SUPPRESS_RE = re.compile(
+    r"#\s*branchlint:\s*ignore(?:\[(?P<rules>[A-Z0-9,\s]+)\])?")
+
+BASELINE_DEFAULT = Path(".branchlint-baseline.json")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location."""
+
+    file: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    snippet: str = ""
+
+    def sort_key(self) -> Tuple[str, int, int, str]:
+        return (self.file, self.line, self.col, self.rule)
+
+    def to_json(self) -> Dict[str, object]:
+        return {"file": self.file, "line": self.line, "col": self.col,
+                "rule": self.rule, "message": self.message,
+                "snippet": self.snippet}
+
+
+class FileContext:
+    """One parsed source file as the rules see it."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+        #: line -> set of suppressed rule codes (None = all rules)
+        self.suppressions: Dict[int, Optional[Set[str]]] = {}
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        for lineno, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            rules = m.group("rules")
+            codes: Optional[Set[str]] = None
+            if rules:
+                codes = {r.strip() for r in rules.split(",") if r.strip()}
+            # a comment-only line suppresses the next source line too
+            target = lineno
+            if text.lstrip().startswith("#"):
+                target = lineno + 1
+            for ln in {lineno, target}:
+                prev = self.suppressions.get(ln, set())
+                if codes is None or prev is None:
+                    self.suppressions[ln] = None
+                else:
+                    self.suppressions[ln] = prev | codes
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        codes = self.suppressions.get(line, set())
+        return codes is None or rule in (codes or ())
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        snippet = self.lines[line - 1].strip() if line <= len(self.lines) \
+            else ""
+        return Finding(file=self.rel, line=line, col=col, rule=rule,
+                       message=message, snippet=snippet)
+
+
+class Rule:
+    """Base rule: subclass, set ``code``/``title``, implement ``visit``.
+
+    ``visit(ctx)`` runs per file; ``finalize(project)`` runs once after
+    every file, for cross-file checks (metric kind collisions).
+    """
+
+    code: str = "BL000"
+    title: str = ""
+    rationale: str = ""
+
+    def visit(self, ctx: FileContext) -> List[Finding]:
+        return []
+
+    def finalize(self, project: "Project") -> List[Finding]:
+        return []
+
+
+class Project:
+    """Cross-file state handed to ``Rule.finalize``."""
+
+    def __init__(self) -> None:
+        self.files: List[FileContext] = []
+        #: rule-owned scratch space keyed by rule code
+        self.scratch: Dict[str, object] = {}
+
+
+#: the registry: code -> rule instance (import rules/ to populate)
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: instantiate and register a rule by its code."""
+    inst = cls()
+    if inst.code in RULES:
+        raise ValueError(f"duplicate rule code {inst.code}")
+    RULES[inst.code] = inst
+    return cls
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterable[Path]:
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            yield from sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts)
+        elif p.suffix == ".py":
+            yield p
+
+
+@dataclass
+class AnalysisResult:
+    findings: List[Finding] = field(default_factory=list)
+    files_checked: int = 0
+    suppressed: int = 0
+    parse_errors: List[str] = field(default_factory=list)
+
+
+def analyze_paths(paths: Sequence[str],
+                  rules: Optional[Sequence[str]] = None) -> AnalysisResult:
+    """Run the (selected) rules over every ``.py`` under ``paths``."""
+    active = [RULES[c] for c in sorted(RULES)
+              if rules is None or RULES[c].code in rules]
+    project = Project()
+    result = AnalysisResult()
+    for path in iter_python_files(paths):
+        rel = _relpath(path)
+        try:
+            ctx = FileContext(path, rel, path.read_text())
+        except (SyntaxError, UnicodeDecodeError) as err:
+            result.parse_errors.append(f"{rel}: {err}")
+            continue
+        project.files.append(ctx)
+        result.files_checked += 1
+        for rule in active:
+            for f in rule.visit(ctx):
+                if ctx.suppressed(f.line, f.rule):
+                    result.suppressed += 1
+                else:
+                    result.findings.append(f)
+    for rule in active:
+        for f in rule.finalize(project):
+            ctx = next((c for c in project.files if c.rel == f.file), None)
+            if ctx is not None and ctx.suppressed(f.line, f.rule):
+                result.suppressed += 1
+            else:
+                result.findings.append(f)
+    result.findings.sort(key=Finding.sort_key)
+    return result
+
+
+def _relpath(path: Path) -> str:
+    try:
+        return path.resolve().relative_to(Path.cwd()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+# ----------------------------------------------------------------------
+# baseline
+# ----------------------------------------------------------------------
+def load_baseline(path: Path) -> List[Dict[str, object]]:
+    data = json.loads(Path(path).read_text())
+    entries = data.get("findings", [])
+    if not isinstance(entries, list):
+        raise ValueError(f"baseline {path} has no findings list")
+    return entries
+
+
+def write_baseline(findings: Sequence[Finding], path: Path) -> None:
+    Path(path).write_text(json.dumps({
+        "version": 1,
+        "tool": "branchlint",
+        "findings": [f.to_json() for f in sorted(findings,
+                                                 key=Finding.sort_key)],
+    }, indent=1) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: Sequence[Dict[str, object]]
+                   ) -> Tuple[List[Finding], int]:
+    """Split findings into (new, n_baselined).
+
+    Matching is content-anchored — ``(file, rule, snippet)`` — so a
+    baselined finding survives line drift from unrelated edits; each
+    baseline entry absorbs at most one finding (count-aware).
+    """
+    budget: Dict[Tuple[str, str, str], int] = {}
+    for e in baseline:
+        key = (str(e.get("file")), str(e.get("rule")),
+               str(e.get("snippet", "")))
+        budget[key] = budget.get(key, 0) + 1
+    new: List[Finding] = []
+    absorbed = 0
+    for f in findings:
+        key = (f.file, f.rule, f.snippet)
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            absorbed += 1
+        else:
+            new.append(f)
+    return new, absorbed
+
+
+# ----------------------------------------------------------------------
+# rendering
+# ----------------------------------------------------------------------
+def render_text(result: AnalysisResult, new: Sequence[Finding],
+                baselined: int) -> str:
+    lines = [f"{f.file}:{f.line}:{f.col}: {f.rule} {f.message}"
+             for f in new]
+    lines.append(
+        f"branchlint: {len(new)} finding(s) "
+        f"({baselined} baselined, {result.suppressed} suppressed) "
+        f"in {result.files_checked} file(s)")
+    for err in result.parse_errors:
+        lines.append(f"parse error: {err}")
+    return "\n".join(lines)
+
+
+def render_json(result: AnalysisResult, new: Sequence[Finding],
+                baselined: int) -> str:
+    return json.dumps({
+        "version": 1,
+        "tool": "branchlint",
+        "rules": {code: rule.title for code, rule in sorted(RULES.items())},
+        "files_checked": result.files_checked,
+        "suppressed": result.suppressed,
+        "baselined": baselined,
+        "parse_errors": result.parse_errors,
+        "findings": [f.to_json() for f in new],
+    }, indent=1)
+
+
+__all__ = [
+    "AnalysisResult",
+    "BASELINE_DEFAULT",
+    "FileContext",
+    "Finding",
+    "Project",
+    "RULES",
+    "Rule",
+    "analyze_paths",
+    "apply_baseline",
+    "iter_python_files",
+    "load_baseline",
+    "register",
+    "render_json",
+    "render_text",
+    "write_baseline",
+]

@@ -1,0 +1,11 @@
+"""branchlint rules — importing this package populates the registry.
+
+Each module defines one ``@register``-ed rule; the engine's ``RULES``
+dict is the single source of truth afterwards.  Add a rule by dropping
+a ``blNNN_*.py`` module here and importing it below (DESIGN §15 walks
+through the full recipe).
+"""
+
+from repro.analysis.rules import (bl001_errno, bl002_handles,  # noqa: F401
+                                  bl003_threads, bl004_spans,
+                                  bl005_metrics, bl006_flags)

@@ -1,0 +1,96 @@
+"""BL001 — errno discipline on the API/server error surfaces.
+
+The invariant (DESIGN §10, core/errors.py): every failure crossing the
+branch-context boundary carries a machine-readable ``Errno`` — either a
+``BranchError`` subclass's ``default_errno`` or an explicit
+``errno=`` override — so the front door can map it onto an HTTP status
+(429/507/400) and clients can branch on the code.  Two anti-patterns
+break that chain:
+
+* **Silent broad catch** — ``except Exception: pass`` (or any handler
+  that catches ``Exception``/``BaseException``/bare and neither
+  re-raises nor uses the bound exception) swallows the errno on the
+  very paths that were supposed to report it.  PR 8's front door
+  shipped several of these on HTTP paths; this rule is why they cannot
+  come back.
+* **Errno-less raise** — ``raise RuntimeError(...)`` /
+  ``raise Exception(...)`` on a protocol surface.  ``BranchError``
+  *is* a ``RuntimeError``, so raising the generic class bypasses the
+  errno vocabulary while still being caught by family handlers —
+  the worst of both.
+
+Scope: files under ``api/``/``server/`` path segments, plus any module
+that imports the shared error vocabulary (mentions ``BranchError`` or
+``Errno``).  ``ValueError``/``TypeError``/``KeyError`` raises stay
+legal — they are Python-contract errors (bad arguments), not branch
+protocol failures.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.engine import FileContext, Finding, Rule, register
+from repro.analysis.rules.common import catches_broad, name_used
+
+#: generic exception classes that carry no errno but overlap BranchError
+_GENERIC_RAISES = frozenset({"Exception", "BaseException", "RuntimeError"})
+
+
+def _in_scope(ctx: FileContext) -> bool:
+    parts = set(ctx.rel.split("/"))
+    if {"api", "server"} & parts:
+        return True
+    return "BranchError" in ctx.source or "Errno" in ctx.source
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler neither re-raises nor looks at the error."""
+    for stmt in handler.body:
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Raise):
+                return False
+    if handler.name:
+        return not any(name_used(stmt, handler.name)
+                       for stmt in handler.body)
+    return True
+
+
+@register
+class ErrnoDiscipline(Rule):
+    code = "BL001"
+    title = "errno discipline: no swallowed or errno-less errors on " \
+            "API/server paths"
+    rationale = ("every BranchError carries an Errno; broad silent "
+                 "catches and generic raises break the errno->HTTP chain")
+
+    def visit(self, ctx: FileContext) -> List[Finding]:
+        if not _in_scope(ctx):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler) and \
+                    catches_broad(node) and _swallows(node):
+                what = "bare except" if node.type is None else \
+                    "except Exception"
+                out.append(ctx.finding(
+                    node, self.code,
+                    f"{what} silently swallows errors (and their errno) "
+                    "on a protocol surface; catch the specific "
+                    "BranchError family (or narrow OS errors) instead"))
+            elif isinstance(node, ast.Raise) and node.exc is not None:
+                exc = node.exc
+                name = None
+                if isinstance(exc, ast.Call) and \
+                        isinstance(exc.func, ast.Name):
+                    name = exc.func.id
+                elif isinstance(exc, ast.Name):
+                    name = exc.id
+                if name in _GENERIC_RAISES:
+                    out.append(ctx.finding(
+                        node, self.code,
+                        f"raise {name} carries no Errno; raise a "
+                        "BranchError subclass (or BranchError with "
+                        "errno=) so callers can map the failure"))
+        return out

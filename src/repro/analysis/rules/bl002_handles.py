@@ -1,0 +1,188 @@
+"""BL002 — handle lifecycle: acquired session handles must not leak.
+
+The invariant (DESIGN §10): a handle returned by ``session.open()`` /
+``session.branch()`` / ``session.adopt()`` owns table slots, page
+reservations, and (for composites) a store subtree.  Within the
+function that acquired it, every path to an exit must either
+
+* **release** it — pass it to ``commit``/``abort``/``finish``/
+  ``close``, or
+* **escape** it — return/yield it, store it on an object or in a
+  container, alias it, iterate it into per-element processing, or hand
+  it to another callable that takes ownership.
+
+A path that reaches ``return``/``raise``/fall-through while still
+holding the handle orphans a live branch: its reservations never free,
+and nobody can ever address it again (the slot index is lost).  This is
+the static face of the PR 9 ``session.branch(n=k)`` mid-vector unwind
+fix — the dynamic variant is tested in ``tests/test_api.py``.
+
+The path walk is the :mod:`repro.analysis.cfg` simulator; read-only
+session verbs (``seq_of``, ``tokens``, ``stat``...) deliberately do
+NOT count as escapes, so "peeked at it, then bailed out early" is still
+reported as the leak it is.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, Iterable, List, Set, Tuple
+
+from repro.analysis.cfg import ExitPath, simulate
+from repro.analysis.engine import FileContext, Finding, Rule, register
+from repro.analysis.rules.common import (SESSION_NAMES, call_method,
+                                         iter_functions, name_used,
+                                         receiver_tail)
+
+#: verbs that create a handle the caller then owns
+ACQUIRE_VERBS = frozenset({"open", "branch", "adopt"})
+
+#: verbs that resolve/retire/release a handle (ownership consumed)
+RELEASE_VERBS = frozenset({"commit", "abort", "finish", "close"})
+
+#: session verbs that only *read* a handle — not an escape
+READ_VERBS = frozenset({
+    "seq_of", "req_id_of", "tokens", "stat", "events", "produced",
+    "status", "state_of", "siblings", "tracked", "alive", "admitted",
+    "result", "decode_target_met", "resume", "pause", "poll",
+})
+
+_COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                   ast.DictComp)
+
+
+def _acquisitions(func: ast.AST) -> Dict[int, Tuple[str, ast.Assign]]:
+    """id(assign-node) -> (var, node) for handle-producing assigns."""
+    out: Dict[int, Tuple[str, ast.Assign]] = {}
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        if not isinstance(target, ast.Name):
+            continue
+        value = node.value
+        if not isinstance(value, ast.Call):
+            continue
+        if call_method(value) in ACQUIRE_VERBS and \
+                receiver_tail(value) in SESSION_NAMES:
+            out[id(node)] = (target.id, node)
+    return out
+
+
+def _iterated_exprs(func: ast.AST) -> Set[int]:
+    """ids of expressions used as ``for ... in <expr>`` iterables."""
+    return {id(node.iter) for node in ast.walk(func)
+            if isinstance(node, (ast.For, ast.AsyncFor))}
+
+
+def _is_read_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and \
+        call_method(node) in READ_VERBS and \
+        receiver_tail(node) in (SESSION_NAMES | {"self"})
+
+
+def _uses_outside_reads(node: ast.AST, var: str) -> bool:
+    """Whether ``var`` occurs in the subtree other than as an argument
+    of a read-verb call (``BranchError(f"...{session.seq_of(hd)}")``
+    only *reads* hd — the outer call must not count as an escape)."""
+    if _is_read_call(node):
+        return False
+    if isinstance(node, ast.Name):
+        return node.id == var
+    return any(_uses_outside_reads(c, var)
+               for c in ast.iter_child_nodes(node))
+
+
+def _var_effect(node: ast.AST, var: str, iter_ids: Set[int]) -> str:
+    """How ``node`` treats a held handle var: keep | release | escape."""
+    if id(node) in iter_ids and name_used(node, var):
+        return "escape"     # handle list iterated into per-element code
+    effect = "keep"
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            touched = \
+                any(_uses_outside_reads(a, var) for a in sub.args) or \
+                any(_uses_outside_reads(k.value, var)
+                    for k in sub.keywords)
+            if not touched:
+                continue
+            method = call_method(sub)
+            if method in RELEASE_VERBS:
+                return "release"
+            if method in READ_VERBS and \
+                    receiver_tail(sub) in (SESSION_NAMES | {"self"}):
+                continue            # a read, not an ownership transfer
+            effect = "escape"
+        elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            if sub is not node and name_used(sub, var):
+                effect = "escape"   # captured by a closure
+        elif isinstance(sub, _COMPREHENSIONS):
+            if any(name_used(gen.iter, var) for gen in sub.generators):
+                effect = "escape"   # comprehension over the handle list
+    if effect == "escape":
+        return effect
+    if isinstance(node, (ast.Return, ast.Yield, ast.YieldFrom)) and \
+            _uses_outside_reads(node, var):
+        return "escape"
+    if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        value = getattr(node, "value", None)
+        if value is not None and _uses_outside_reads(value, var):
+            return "escape"         # aliased or stored
+    if isinstance(node, ast.Expr) and name_used(node, var) and \
+            isinstance(node.value, (ast.Yield, ast.YieldFrom, ast.Await)):
+        return "escape"
+    if isinstance(node, ast.Delete) and name_used(node, var):
+        return "escape"
+    return effect
+
+
+@register
+class HandleLifecycle(Rule):
+    code = "BL002"
+    title = "handle lifecycle: session handles reach " \
+            "commit/abort/finish/close or escape on every path"
+    rationale = ("a dropped handle orphans a live branch: reservations "
+                 "never free and the slot index is unrecoverable")
+
+    def visit(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for func, qual, _is_async in iter_functions(ctx.tree):
+            acquisitions = _acquisitions(func)
+            if not acquisitions:
+                continue
+            iter_ids = _iterated_exprs(func)
+            held = "held:"
+
+            def transfer(node: ast.AST,
+                         state: FrozenSet[str]) -> Iterable[FrozenSet[str]]:
+                s: Set[str] = set(state)
+                for fact in list(s):
+                    effect = _var_effect(node, fact[len(held):], iter_ids)
+                    if effect in ("release", "escape"):
+                        s.discard(fact)
+                if id(node) in acquisitions:
+                    s.add(held + acquisitions[id(node)][0])
+                return [frozenset(s)]
+
+            exits: List[ExitPath] = simulate(
+                list(func.body), frozenset(), transfer)
+            leaks: Dict[str, Set[Tuple[str, int]]] = {}
+            for ex in exits:
+                for fact in ex.state:
+                    leaks.setdefault(fact[len(held):], set()).add(
+                        (ex.kind, getattr(ex.node, "lineno", 0)))
+            seen: Set[str] = set()
+            for var, node in acquisitions.values():
+                if var not in leaks or var in seen:
+                    continue
+                seen.add(var)
+                ways = sorted(leaks[var])
+                desc = ", ".join(f"{k} at line {ln}" for k, ln in ways)
+                verb = call_method(node.value)
+                out.append(ctx.finding(
+                    node, self.code,
+                    f"handle {var!r} from session.{verb}() in {qual}() "
+                    f"may leak ({desc}): no commit/abort/finish/close "
+                    "or escape on that path"))
+        return out

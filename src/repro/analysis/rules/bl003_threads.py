@@ -1,0 +1,117 @@
+"""BL003 — thread boundary: asyncio code never dispatches on the engine.
+
+The serving stack runs two worlds (DESIGN §13): the **engine thread**
+owns every JAX dispatch and all ``BranchSession``/``ServeEngine``
+mutation; the **asyncio event loop** owns sockets, futures, and queues.
+The only legal crossings are:
+
+* loop → engine: post a closure onto the command queue
+  (``mux.call(fn)`` / ``mux.post(fn)``) and await the future;
+* engine → loop: ``loop.call_soon_threadsafe(cb, ...)`` with a callback
+  the loop will run (resolving a future, feeding an ``asyncio.Queue``).
+
+Two anti-patterns cross the boundary bare:
+
+* an ``async def`` body invoking a dispatching verb (``step``,
+  ``open``, ``branch``, ``commit``...) directly on a session/scheduler/
+  engine receiver — that runs JAX dispatch on the event-loop thread,
+  racing the engine thread on the handle table and page pool;
+* a synchronous (engine-side) function resolving asyncio primitives
+  in-place (``fut.set_result``, ``queue.put_nowait``) instead of
+  marshalling through ``call_soon_threadsafe`` — asyncio objects are
+  not thread-safe and the wakeup is silently lost.
+
+Closures defined *inside* an async body (nested ``def``/``lambda``) are
+exempt from the first check — they are exactly the payloads shipped to
+the engine via the command queue.  Sync callbacks whose *name* is
+passed to ``call_soon_threadsafe`` in the same file are exempt from the
+second — they run on the loop thread by construction.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.engine import FileContext, Finding, Rule, register
+from repro.analysis.rules.common import (call_method, calls_in,
+                                         iter_functions, own_nodes,
+                                         receiver_tail)
+
+#: verbs that dispatch JAX work or mutate engine-owned state
+DISPATCH_VERBS = frozenset({
+    "step", "open", "adopt", "branch", "commit", "abort", "finish",
+    "wait", "submit", "admit", "fork", "decode", "prefill", "verify",
+    "spec_verify", "truncate", "resume", "pause", "hold", "unhold",
+    "explore", "launch", "evict", "evict_all", "evict_parked",
+    "kick_stalled", "set_sampling",
+})
+
+#: receivers that address the engine-thread-owned stack
+ENGINE_RECEIVERS = frozenset({"session", "sess", "sched", "engine",
+                              "driver"})
+
+#: asyncio-primitive mutators that are not thread-safe
+LOOP_ONLY_VERBS = frozenset({"set_result", "set_exception", "put_nowait"})
+
+def _threadsafe_names(ctx: FileContext) -> Set[str]:
+    """Names handed to ``call_soon_threadsafe`` anywhere in the file."""
+    names: Set[str] = set()
+    for call in calls_in(ctx.tree, "call_soon_threadsafe"):
+        for arg in call.args:
+            if isinstance(arg, ast.Name):
+                names.add(arg.id)
+    return names
+
+
+@register
+class ThreadBoundary(Rule):
+    code = "BL003"
+    title = "thread boundary: asyncio<->engine crossings go through the " \
+            "command queue / call_soon_threadsafe"
+    rationale = ("JAX dispatch belongs to the engine thread and asyncio "
+                 "primitives to the loop thread; bare crossings race")
+
+    def visit(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        exempt = _threadsafe_names(ctx)
+        for func, qual, is_async in iter_functions(ctx.tree):
+            own = own_nodes(func)
+            if is_async:
+                for node in own:
+                    if not isinstance(node, ast.Call):
+                        continue
+                    verb = call_method(node)
+                    if verb in DISPATCH_VERBS and \
+                            receiver_tail(node) in ENGINE_RECEIVERS:
+                        out.append(ctx.finding(
+                            node, self.code,
+                            f"async {qual}() dispatches "
+                            f".{verb}() on the engine directly; post a "
+                            "closure via the command queue (mux.call) "
+                            "and await the future instead"))
+            else:
+                if func.name in exempt:
+                    continue    # runs on the loop via call_soon_threadsafe
+                for node in own:
+                    if not isinstance(node, ast.Call):
+                        continue
+                    verb = call_method(node)
+                    if verb in LOOP_ONLY_VERBS and \
+                            not self._inside_threadsafe(node, func):
+                        out.append(ctx.finding(
+                            node, self.code,
+                            f"sync {qual}() calls .{verb}() on an "
+                            "asyncio primitive in-place; marshal through "
+                            "loop.call_soon_threadsafe so the loop "
+                            "thread performs the mutation"))
+        return out
+
+    @staticmethod
+    def _inside_threadsafe(call: ast.Call, func: ast.AST) -> bool:
+        """Whether ``call`` sits inside a call_soon_threadsafe(...) arg."""
+        for outer in calls_in(func, "call_soon_threadsafe"):
+            for arg in outer.args:
+                if any(sub is call for sub in ast.walk(arg)):
+                    return True
+        return False

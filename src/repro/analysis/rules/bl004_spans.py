@@ -1,0 +1,110 @@
+"""BL004 — span balance: locally-managed spans close exactly once.
+
+``Tracer.begin_span`` pushes onto a per-track stack; ``end_span`` pops
+and returns False on an already-empty track (obs/tracer.py's
+re-entrant close guard).  The runtime guard makes a double-close
+*survivable*, not correct: the stray pop closes the **enclosing** span
+early, silently mis-nesting every span above it in the Perfetto trace.
+A missing pop is worse — the span stays open forever and the track is
+ruined from that point on.
+
+The repo's branch-long spans (opened at ``create_root``/``fork``,
+closed at resolve) are managed across functions by the lifecycle
+module, and no local rule can see that protocol.  So this rule checks
+the *locally-managed* case only: a function that both begins **and**
+ends spans must balance them on every exit path — including the
+``raise`` paths, which is exactly what ``try/finally`` is for.  The
+:mod:`repro.analysis.cfg` simulator enumerates the paths; the state is
+the open-span depth.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import FrozenSet, Iterable, List, Set, Tuple
+
+from repro.analysis.cfg import simulate
+from repro.analysis.engine import FileContext, Finding, Rule, register
+from repro.analysis.rules.common import calls_in, iter_functions
+
+_BEGIN = "begin_span"
+_END = "end_span"
+_UNDER = "spans:-1"          # sticky fact: an end_span underflowed
+
+
+def _net_spans(node: ast.AST) -> Tuple[int, List[ast.Call]]:
+    """(net depth change, end_span calls in source order) for a stmt."""
+    net = 0
+    ends: List[ast.Call] = []
+    for call in calls_in(node, _BEGIN, _END):
+        name = call.func.attr if isinstance(call.func, ast.Attribute) \
+            else call.func.id if isinstance(call.func, ast.Name) else ""
+        if name == _BEGIN:
+            net += 1
+        else:
+            net -= 1
+            ends.append(call)
+    return net, ends
+
+
+@register
+class SpanBalance(Rule):
+    code = "BL004"
+    title = "span balance: begin_span/end_span pair exactly once on " \
+            "every exit path"
+    rationale = ("an unmatched pop closes the enclosing span early and "
+                 "mis-nests the trace; a missing pop ruins the track")
+
+    def visit(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for func, qual, _is_async in iter_functions(ctx.tree):
+            has_begin = any(True for _ in calls_in(func, _BEGIN))
+            has_end = any(True for _ in calls_in(func, _END))
+            if not (has_begin and has_end):
+                # branch-long spans are balanced cross-function by the
+                # lifecycle protocol; only local management is checkable
+                continue
+            underflows: List[ast.Call] = []
+
+            def transfer(node: ast.AST,
+                         state: FrozenSet[str]) -> Iterable[FrozenSet[str]]:
+                depth = next((int(f.split(":", 1)[1]) for f in state
+                              if f.startswith("spans:") and f != _UNDER),
+                             0)
+                sticky = {f for f in state if f == _UNDER}
+                net, ends = _net_spans(node)
+                # worst-case ordering within one statement: pops first
+                if ends and depth - len(ends) < 0:
+                    underflows.extend(ends)
+                    sticky = {_UNDER}
+                depth = max(depth + net, 0)
+                facts: Set[str] = set(sticky)
+                if depth:
+                    facts.add(f"spans:{depth}")
+                return [frozenset(facts)]
+
+            exits = simulate(list(func.body), frozenset(), transfer)
+            reported: Set[int] = set()
+            for ex in exits:
+                depth = next((int(f.split(":", 1)[1]) for f in ex.state
+                              if f.startswith("spans:") and f != _UNDER),
+                             0)
+                if depth > 0:
+                    line = getattr(ex.node, "lineno", 0)
+                    if line not in reported:
+                        reported.add(line)
+                        out.append(ctx.finding(
+                            ex.node, self.code,
+                            f"{qual}() can exit ({ex.kind}) with "
+                            f"{depth} span(s) still open; close in a "
+                            "finally so raise paths balance too"))
+            for call in underflows:
+                if id(call) in reported:
+                    continue
+                reported.add(id(call))
+                out.append(ctx.finding(
+                    call, self.code,
+                    f"{qual}() can call end_span() with no span open "
+                    "on some path; the stray pop closes the enclosing "
+                    "span early and mis-nests the trace"))
+        return out

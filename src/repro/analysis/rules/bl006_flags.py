@@ -1,0 +1,161 @@
+"""BL006 — flags validity: only declared BR_* flags, no namespace mixing.
+
+Two flag words share the ``BR_`` prefix and *different bit layouts*
+(the classic errno-style trap this rule exists for):
+
+* the **API word** (``repro.api.flags``): ``BR_ISOLATE=1<<0``,
+  ``BR_HOLD=1<<1``, ``BR_NESTED=1<<2``, ``BR_SPECULATIVE=1<<3``,
+  ``BR_NONBLOCK=1<<4``, plus the ``BR_ALL`` mask;
+* the **runtime word** (``repro.core.runtime_api``): op codes
+  ``BR_CREATE/BR_COMMIT/BR_ABORT`` and create-flags ``BR_STATE=1<<0``,
+  ``BR_KV=1<<1``, ``BR_ISOLATE=1<<2``, ``BR_CLOSE_FDS=1<<3``.
+
+Note ``BR_ISOLATE`` exists in *both* with *different values* — OR-ing
+an API flag into a runtime word (or vice versa) type-checks, runs, and
+quietly sets the wrong bit.  Checks:
+
+* **Unknown flag** — any ``BR_*`` identifier that is not declared in
+  either namespace (typos like ``BR_SPECULATE`` silently become
+  ``NameError`` at best, a mis-resolved import at worst).
+* **Namespace mixing** — one ``|`` expression combining a flag that
+  exists only in the API word with one that exists only in the runtime
+  word.  (``BR_ISOLATE`` is in both, so it can't convict on its own.)
+* **Ungated truncate** — ``session.truncate(hd, ...)`` is ``-EPERM``
+  unless the branch was opened with ``BR_SPECULATIVE``
+  (api/flags.py's license).  A callsite in a function that never
+  mentions the flag is either dead-on-arrival or relying on a distant
+  invariant; wrappers themselves named ``truncate`` are exempt (they
+  *are* the documented pass-through surface).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set
+
+from repro.analysis.engine import FileContext, Finding, Rule, register
+from repro.analysis.rules.common import (SESSION_NAMES, call_method,
+                                         iter_functions, own_nodes,
+                                         receiver_tail)
+
+API_FLAGS = frozenset({"BR_ISOLATE", "BR_HOLD", "BR_NESTED",
+                       "BR_SPECULATIVE", "BR_NONBLOCK", "BR_ALL"})
+RT_FLAGS = frozenset({"BR_CREATE", "BR_COMMIT", "BR_ABORT", "BR_STATE",
+                      "BR_KV", "BR_ISOLATE", "BR_CLOSE_FDS"})
+DECLARED = API_FLAGS | RT_FLAGS
+API_ONLY = API_FLAGS - RT_FLAGS
+RT_ONLY = RT_FLAGS - API_FLAGS
+
+_FLAG_RE = re.compile(r"^BR_[A-Z][A-Z_]*$")
+
+
+def _flag_names(node: ast.AST) -> Set[str]:
+    """Every BR_* identifier read in a subtree (Name loads + attrs)."""
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and _FLAG_RE.match(sub.id) and \
+                isinstance(sub.ctx, ast.Load):
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute) and _FLAG_RE.match(sub.attr) \
+                and isinstance(sub.ctx, ast.Load):
+            out.add(sub.attr)
+    return out
+
+
+def _bitor_leaves(node: ast.BinOp) -> Set[str]:
+    """BR_* names joined by one contiguous ``|`` expression."""
+    names: Set[str] = set()
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.BitOr):
+            stack.extend([n.left, n.right])
+        else:
+            names |= _flag_names(n)
+    return names
+
+
+def _func_source(ctx: FileContext, func: ast.AST) -> str:
+    start = getattr(func, "lineno", 1) - 1
+    end = getattr(func, "end_lineno", start + 1)
+    return "\n".join(ctx.lines[start:end])
+
+
+@register
+class FlagsValidity(Rule):
+    code = "BL006"
+    title = "flags validity: declared BR_* only, no API/runtime word " \
+            "mixing, truncate gated on BR_SPECULATIVE"
+    rationale = ("the API and runtime flag words share a prefix but not "
+                 "bit layouts; a mixed word sets the wrong bit silently")
+
+    def visit(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    _FLAG_RE.match(node.id) and node.id not in DECLARED:
+                out.append(ctx.finding(
+                    node, self.code,
+                    f"{node.id} is not a declared flag in either the "
+                    "API word (repro.api.flags) or the runtime word "
+                    "(repro.core.runtime_api)"))
+            elif isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    _FLAG_RE.match(node.attr) and \
+                    node.attr not in DECLARED:
+                out.append(ctx.finding(
+                    node, self.code,
+                    f"{node.attr} is not a declared flag in either the "
+                    "API word or the runtime word"))
+            elif isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, ast.BitOr):
+                # only convict at the top of a | chain, once
+                leaves = _bitor_leaves(node)
+                api = sorted(leaves & API_ONLY)
+                rt = sorted(leaves & RT_ONLY)
+                if api and rt and not self._parent_is_bitor(ctx, node):
+                    out.append(ctx.finding(
+                        node, self.code,
+                        f"one flag word mixes API flags {api} with "
+                        f"runtime flags {rt}; the two namespaces have "
+                        "different bit layouts — build each word from "
+                        "its own module only"))
+        out.extend(self._truncate_gates(ctx))
+        return out
+
+    # report each | chain once: precompute which BinOps are nested
+    def _parent_is_bitor(self, ctx: FileContext, node: ast.BinOp) -> bool:
+        cache = getattr(ctx, "_bl006_bitor_children", None)
+        if cache is None:
+            cache = set()
+            for sub in ast.walk(ctx.tree):
+                if isinstance(sub, ast.BinOp) and \
+                        isinstance(sub.op, ast.BitOr):
+                    for child in (sub.left, sub.right):
+                        if isinstance(child, ast.BinOp) and \
+                                isinstance(child.op, ast.BitOr):
+                            cache.add(id(child))
+            ctx._bl006_bitor_children = cache  # type: ignore[attr-defined]
+        return id(node) in cache
+
+    def _truncate_gates(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for func, qual, _is_async in iter_functions(ctx.tree):
+            if func.name == "truncate":
+                continue        # the documented pass-through wrapper
+            mentions_gate = "BR_SPECULATIVE" in _func_source(ctx, func)
+            if mentions_gate:
+                continue
+            for node in own_nodes(func):
+                if isinstance(node, ast.Call) and \
+                        call_method(node) == "truncate" and \
+                        receiver_tail(node) in SESSION_NAMES:
+                    out.append(ctx.finding(
+                        node, self.code,
+                        f"{qual}() calls session.truncate() but never "
+                        "references BR_SPECULATIVE; truncate is -EPERM "
+                        "on non-speculative branches — open with "
+                        "BR_SPECULATIVE or gate the call"))
+        return out

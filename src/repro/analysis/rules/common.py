@@ -1,0 +1,116 @@
+"""Shared AST helpers for the branchlint rules."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+#: receiver names that address the session/scheduler/engine stack
+SESSION_NAMES = frozenset({"session", "sess"})
+
+
+def dotted(node: ast.AST) -> Optional[List[str]]:
+    """``self.session.open`` -> ``["self", "session", "open"]``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def call_method(call: ast.Call) -> Optional[str]:
+    """The method/function name a Call invokes, if syntactically plain."""
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return None
+
+
+def receiver_tail(call: ast.Call) -> Optional[str]:
+    """The name immediately left of the method: ``a.b.open()`` -> ``b``."""
+    if not isinstance(call.func, ast.Attribute):
+        return None
+    value = call.func.value
+    if isinstance(value, ast.Attribute):
+        return value.attr
+    if isinstance(value, ast.Name):
+        return value.id
+    return None
+
+
+def iter_functions(tree: ast.AST) -> Iterator[Tuple[ast.AST, str, bool]]:
+    """Yield ``(func_node, qualname, is_async)`` for every def, outermost
+    first; nested defs are yielded too (each analyzed on its own)."""
+
+    def walk(node: ast.AST, prefix: str) -> Iterator:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield (child, qual,
+                       isinstance(child, ast.AsyncFunctionDef))
+                yield from walk(child, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def calls_in(node: ast.AST, *methods: str) -> Iterator[ast.Call]:
+    """Every Call in the subtree whose plain method name is in ``methods``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and call_method(sub) in methods:
+            yield sub
+
+
+def own_nodes(func: ast.AST) -> List[ast.AST]:
+    """Walk ``func``'s body but stop at nested def/lambda boundaries, so
+    a node is attributed to its *innermost* enclosing function only."""
+    out: List[ast.AST] = []
+    stack: List[ast.AST] = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def name_used(node: ast.AST, name: str) -> bool:
+    return any(isinstance(sub, ast.Name) and sub.id == name
+               for sub in ast.walk(node))
+
+
+def catches_broad(handler: ast.ExceptHandler) -> bool:
+    """Whether an except clause catches Exception/BaseException/bare."""
+
+    def broad(t: ast.expr) -> bool:
+        return isinstance(t, ast.Name) and \
+            t.id in ("Exception", "BaseException")
+
+    t = handler.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Tuple):
+        return any(broad(e) for e in t.elts)
+    return broad(t)
+
+
+__all__ = [
+    "SESSION_NAMES",
+    "calls_in",
+    "call_method",
+    "catches_broad",
+    "dotted",
+    "iter_functions",
+    "name_used",
+    "own_nodes",
+    "receiver_tail",
+]

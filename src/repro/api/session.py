@@ -314,26 +314,59 @@ class BranchSession:
             made = self._fork_blocking(entry, n, flags, max_steps)
 
         kids: List[_Entry] = []
-        for seq, state, rt_handle in made:
-            kid = self._new_entry(
-                req_id=entry.req_id, root_hd=entry.root_hd,
-                parent_hd=parent, flags=flags, depth=entry.depth + 1)
-            kid.seq = seq
-            kid.state = state
-            kid.rt_handle = rt_handle
-            kid.fork_len = len(self.engine.tokens(seq))
-            # the flags word is authoritative: children of a held parent
-            # inherit the scheduler-level hold, so an unset BR_HOLD must
-            # actively release them into the continuous batch
-            if flags & BR_HOLD:
-                self.sched.hold(seq)
-            else:
-                self.sched.unhold(seq)
-            kids.append(kid)
+        try:
+            for seq, state, rt_handle in made:
+                kid = self._new_entry(
+                    req_id=entry.req_id, root_hd=entry.root_hd,
+                    parent_hd=parent, flags=flags, depth=entry.depth + 1)
+                kids.append(kid)
+                kid.seq = seq
+                kid.state = state
+                kid.rt_handle = rt_handle
+                kid.fork_len = len(self.engine.tokens(seq))
+                # the flags word is authoritative: children of a held
+                # parent inherit the scheduler-level hold, so an unset
+                # BR_HOLD must actively release them into the batch
+                if flags & BR_HOLD:
+                    self.sched.hold(seq)
+                else:
+                    self.sched.unhold(seq)
+        except BranchError:
+            self._unwind_vector(made, kids)
+            raise
         group = tuple(k.hd for k in kids)
         for k in kids:
             k.group = group
         return list(group)
+
+    def _unwind_vector(
+        self, made: Sequence[Tuple[int, Any, Any]],
+        kids: Sequence[_Entry],
+    ) -> None:
+        """Mid-vector failure: no half-created sibling group survives.
+
+        ``branch(n=k)`` promises all-or-nothing; a failure while the
+        kid entries were being wired (e.g. a scheduler verb racing an
+        eviction) must not orphan the siblings already created — their
+        slots would hold the table's last reference to live branches
+        nobody can address again, and their page reservations would
+        never free.  Abort every forked domain, then release every
+        handle slot.  (The static face of this invariant is branchlint
+        BL002; the dynamic face is tested in tests/test_api.py.)
+        """
+        for seq, _state, rt_handle in made:
+            try:
+                if rt_handle is not None:
+                    self.runtime.abort(rt_handle)
+                elif seq in self.engine.kv.tree and \
+                        self.engine.kv.is_live(seq):
+                    self.engine.abort(seq)
+            except BranchError:
+                pass        # already resolved/reaped by the failure
+        for kid in kids:
+            kid.resolved = "aborted"
+            kid.events |= EV_INVALIDATED
+            self.close(kid.hd)
 
     def _fork_domains(
         self, entry: _Entry, n: int, flags: int

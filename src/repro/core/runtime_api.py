@@ -165,7 +165,9 @@ class BranchRuntime:
             for undo in reversed(done):
                 try:
                     undo()
-                except Exception:  # pragma: no cover - best-effort unwind
+                # best-effort unwind while the original error re-raises
+                # below; a failing undo must not mask it
+                except Exception:  # pragma: no cover  # branchlint: ignore[BL001]
                     pass
             raise
 

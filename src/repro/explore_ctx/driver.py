@@ -240,10 +240,14 @@ class ExplorationDriver:
         """
         hd = self.session.adopt(req_id)
         if seq is not None and self.session.seq_of(hd) != seq:
+            actual = self.session.seq_of(hd)
+            # drop the just-adopted handle before raising: the request
+            # itself stays with the scheduler, but the slot must not
+            # leak (close() never resolves; see session.close)
+            self.session.close(hd)
             raise BranchError(
-                f"request {req_id} is rooted at seq "
-                f"{self.session.seq_of(hd)}, not {seq}",
-                errno=Errno.EINVAL)
+                f"request {req_id} is rooted at seq {actual}, "
+                f"not {seq}", errno=Errno.EINVAL)
         return BranchContext(self.session, hd)
 
     # -- stepping -------------------------------------------------------
@@ -411,13 +415,15 @@ class ExplorationDriver:
                 stalled = 0
             elif stalled > 1:
                 blocked = [e.name for e in self._live]
-                raise RuntimeError(
-                    f"exploration driver stalled; blocked: {blocked}")
+                raise BranchError(
+                    f"exploration driver stalled; blocked: {blocked}",
+                    errno=Errno.EBUSY)
         else:
             if self._live and (until is None or not until.done):
-                raise RuntimeError(
+                raise BranchError(
                     f"driver exceeded max_steps={max_steps} with "
-                    f"{len(self._live)} explorations live")
+                    f"{len(self._live)} explorations live",
+                    errno=Errno.EAGAIN)
         if raise_errors:
             if until is not None:
                 # the caller awaits ONE exploration: only its error is

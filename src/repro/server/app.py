@@ -364,8 +364,8 @@ class FrontDoor:
             if rec.live and hd is not None:
                 try:
                     out["stat"] = session.stat(hd)
-                except Exception:
-                    pass
+                except BranchError:
+                    pass    # handle raced a resolve; tree still renders
             out["session"] = session.tree()
             return out
 
@@ -393,8 +393,8 @@ class FrontDoor:
             try:
                 writer.close()
                 await writer.wait_closed()
-            except Exception:
-                pass
+            except (OSError, RuntimeError):
+                pass    # peer already gone / transport mid-teardown
 
     @staticmethod
     async def _read_request(reader: asyncio.StreamReader

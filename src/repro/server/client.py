@@ -67,8 +67,8 @@ class ServeClient:
         try:
             writer.close()
             await writer.wait_closed()
-        except Exception:
-            pass
+        except (OSError, RuntimeError):
+            pass    # peer already gone / transport mid-teardown
 
     async def _request(self, method: str, path: str,
                        body: Optional[Dict[str, Any]] = None) -> Any:

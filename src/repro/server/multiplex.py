@@ -38,6 +38,7 @@ import traceback
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Generator, List, Optional
 
+from repro.core.errors import BranchError, BranchStateError
 from repro.explore_ctx.context import policy_result
 from repro.explore_ctx.driver import Decode, _WaitFork
 from repro.server.tenancy import ServedRequest, TenancyManager
@@ -68,8 +69,8 @@ def jsonable(x: Any) -> Any:
     if hasattr(x, "item"):
         try:
             return jsonable(x.item())
-        except Exception:
-            pass
+        except (TypeError, ValueError):
+            pass    # multi-element array: fall through to str()
     return str(x)
 
 
@@ -174,7 +175,9 @@ class EngineLoop:
     async def call(self, fn: Callable[[Any], Any]) -> Any:
         """Run ``fn(session)`` on the engine thread; await its result."""
         if not self.running:
-            raise RuntimeError("engine loop is not running")
+            # BranchStateError is still a RuntimeError for old callers,
+            # but carries Errno.EINVAL across the protocol surface
+            raise BranchStateError("engine loop is not running")
         loop = self._aio_loop
         fut = loop.create_future()
 
@@ -336,8 +339,8 @@ class EngineLoop:
         if hd is not None:
             try:
                 tokens = self.session.finish(hd)
-            except Exception:
-                tokens = None
+            except BranchError:
+                tokens = None   # already resolved / stale handle
         rec.state = "evicted"
         rec.evict_reason = reason
         rec.final_tokens = tokens
@@ -411,8 +414,8 @@ class EngineLoop:
         if not rec.sent_admitted and rec.root_hd is not None:
             try:
                 admitted = self.session.admitted(rec.root_hd)
-            except Exception:
-                return
+            except BranchError:
+                return      # handle raced a resolve; try next step
             if admitted:
                 rec.sent_admitted = True
                 rec.state = "running"
@@ -481,7 +484,7 @@ class EngineLoop:
         mid-resolution windows are fine to skip for a step)."""
         try:
             return self.session.tokens(rec.exp.hd)
-        except Exception:
+        except BranchError:
             return None
 
     def _stream_tokens(self, rec: ServedRequest,

@@ -316,6 +316,43 @@ def test_vectorized_fork_one_ledger_group(engine_setup):
     assert len(seq_groups) == 2          # sequential: separate groups
 
 
+def test_vectorized_fork_midvector_error_leaves_no_orphans(engine_setup):
+    """A BranchError raised mid-vector inside branch(n=k) must unwind:
+    no orphaned handles in the table, no stranded page reservations —
+    the dynamic face of branchlint's BL002 handle-lifecycle rule."""
+    s = fresh_session(engine_setup)
+    root = opened_root(s, flags=BR_HOLD)
+    before_handles = set(s.open_handles())
+    before_free = s.engine.kv.free_pages
+    calls = {"n": 0}
+    real_unhold = s.sched.unhold
+
+    def flaky_unhold(seq):
+        calls["n"] += 1
+        if calls["n"] == 2:              # fail wiring the SECOND kid
+            raise BranchError("injected mid-vector failure",
+                              errno=Errno.EBUSY)
+        real_unhold(seq)
+
+    s.sched.unhold = flaky_unhold
+    try:
+        with pytest.raises(BranchError) as exc:
+            s.branch(root, 0, 3)
+        assert "mid-vector" in str(exc.value)
+    finally:
+        s.sched.unhold = real_unhold
+    assert calls["n"] == 2               # it really was mid-vector
+    # the half-created sibling group is fully gone: handle table back
+    # to its pre-call population, every forked page freed again
+    assert set(s.open_handles()) == before_handles
+    assert s.engine.kv.free_pages == before_free
+    # the parent is unharmed: a fresh full-width vector still works
+    kids = s.branch(root, BR_HOLD, 3)
+    assert len(kids) == 3
+    s.commit(kids[0])
+    s.finish(root)
+
+
 # ---------------------------------------------------------------------------
 # composite sessions (store domain rides the same verbs)
 # ---------------------------------------------------------------------------

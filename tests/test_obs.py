@@ -41,7 +41,8 @@ def test_counter_gauge_basics():
     g.add(-2)
     assert g.value == 5
     with pytest.raises(TypeError):
-        m.gauge("x.events")                    # kind collision
+        # the runtime guard branchlint BL005 front-runs, exercised
+        m.gauge("x.events")  # branchlint: ignore[BL005]
 
 
 def test_histogram_bucket_math():
@@ -75,30 +76,30 @@ def test_histogram_percentiles():
 def test_metrics_absorb_and_merged_snapshot():
     a = Observability()
     b = Observability()
-    a.metrics.counter("n").inc(2)
-    b.metrics.counter("n").inc(3)
-    a.metrics.histogram("h").observe(5)
-    b.metrics.histogram("h").observe(7)
+    a.metrics.counter("t.n").inc(2)
+    b.metrics.counter("t.n").inc(3)
+    a.metrics.histogram("t.h").observe(5)
+    b.metrics.histogram("t.h").observe(7)
     merged = Metrics()
     merged.absorb(a.metrics)
     merged.absorb(b.metrics)
-    assert merged.counter("n").value == 5
-    assert merged.histogram("h").count == 2
-    assert merged.histogram("h").sum == 12
+    assert merged.counter("t.n").value == 5
+    assert merged.histogram("t.h").count == 2
+    assert merged.histogram("t.h").sum == 12
     # the process-wide view sees both live hubs
     snap = merged_snapshot()
-    assert snap["counters"]["n"] >= 5
+    assert snap["counters"]["t.n"] >= 5
 
 
 def test_metrics_format_procfs_lines():
     m = Metrics()
     m.counter("kv.commits").inc(3)
     m.gauge("kv.pages_free").set(17)
-    m.histogram("lat_us").observe(12.0)
+    m.histogram("t.lat_us").observe(12.0)
     text = m.format()
     assert "counter kv.commits 3" in text
     assert "gauge   kv.pages_free 17" in text
-    assert "hist    lat_us count=1" in text
+    assert "hist    t.lat_us count=1" in text
 
 
 # ---------------------------------------------------------------------------
@@ -124,7 +125,8 @@ def test_end_span_reentrancy_guard():
     tr = Tracer(enabled=True)
     tr.begin_span(5, "explore")
     assert tr.end_span(5, status="committed") is True
-    assert tr.end_span(5, status="committed") is False   # double close
+    # the double close IS the subject under test here
+    assert tr.end_span(5) is False  # branchlint: ignore[BL004]
     assert len(tr.spans) == 1
     assert tr.spans[0].status == "committed"
 
@@ -148,7 +150,8 @@ def test_chrome_trace_schema_valid_and_loadable(tmp_path):
     assert root and root[0]["args"]["status"] == "open"
     # child inherited the root's process and recorded its parent
     child = [e for e in evs if e["ph"] == "X" and e["tid"] == 1][0]
-    assert child["pid"] == 0 and child["args"]["parent"] == 0
+    # the deliberately-open root span is the subject under test
+    assert child["pid"] == 0 and child["args"]["parent"] == 0  # branchlint: ignore[BL004]
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +309,7 @@ def test_session_stat_metrics_and_format_tree(engine_setup):
     assert "metrics:" not in session.format_tree()
     wait = view["metrics"]["histograms"]["sched.admission_wait_us"]
     assert wait["count"] == 1
+    session.finish(root)                 # release the handle (BL002)
 
 
 def test_best_of_n_trace_matches_snapshot_lineage(engine_setup, tmp_path):
