@@ -17,10 +17,16 @@ so the perf trajectory is tracked across PRs.  Tables:
   HTTP/SSE front door     -> front_door
   branchlint self-host    -> lint_selfhost
 
+  tiered KV + prefix hits -> kv_tier
+
 ``--compare <baseline.json>`` checks the run against a committed
 baseline and fails on a >20% drop of any throughput-like row
 (``*_per_s``, ``*speedup*``, ``*gain*``); latency rows only warn —
 shared CI machines make microsecond medians too noisy to gate on.
+
+Rows whose ``derived`` label embeds a paper target (``...<350us``) are
+checked against it: violations warn by default and fail the run under
+``--strict-derived`` (same noise rationale as the latency compare).
 """
 
 from __future__ import annotations
@@ -28,11 +34,27 @@ from __future__ import annotations
 import argparse
 import json
 import platform
+import re
 import subprocess
 import sys
 import time
 import traceback
 from pathlib import Path
+
+_DERIVED_TARGET = re.compile(r"<\s*(\d+(?:\.\d+)?)\s*us\b")
+
+
+def check_derived(records: list) -> list:
+    """Rows claiming a paper latency bar in their derived label
+    (``paper_T4<350us``) are held to it.  Returns violation strings."""
+    out = []
+    for r in records:
+        m = _DERIVED_TARGET.search(r.get("derived", "") or "")
+        if m and r["value"] > float(m.group(1)):
+            out.append(f"derived target missed {r['module']}.{r['name']}: "
+                       f"{r['value']:.1f}us > {m.group(1)}us "
+                       f"({r['derived']})")
+    return out
 
 
 def compare(baseline_path: Path, records: list) -> list:
@@ -86,6 +108,10 @@ def main(argv=None) -> None:
     ap.add_argument("--compare", default=None,
                     help="baseline BENCH_*.json to regression-check "
                          "against (fail on >20%% throughput drop)")
+    ap.add_argument("--strict-derived", action="store_true",
+                    help="fail (not just warn) when a row misses the "
+                         "paper target embedded in its derived label "
+                         "(e.g. paper_T4<350us)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -96,6 +122,7 @@ def main(argv=None) -> None:
         explore_policies,
         fork_fanout,
         front_door,
+        kv_tier,
         kvbranch_bench,
         lint_selfhost,
         serve_throughput,
@@ -118,6 +145,7 @@ def main(argv=None) -> None:
         ("spec_verify", spec_verify),
         ("front_door", front_door),
         ("lint_selfhost", lint_selfhost),
+        ("kv_tier", kv_tier),
     ]
     if args.only:
         keep = set(args.only.split(","))
@@ -166,6 +194,12 @@ def main(argv=None) -> None:
         "metrics": metrics,
     }, indent=2))
     print(f"wrote {out}")
+    misses = check_derived(records)
+    for line in misses:
+        print(("" if args.strict_derived else "warning: ") + line,
+              file=sys.stderr)
+    if misses and args.strict_derived:
+        failed.append("derived-targets")
     if args.compare:
         regressions = compare(Path(args.compare), records)
         for line in regressions:

@@ -5,7 +5,8 @@ Two flag words share the ``BR_`` prefix and *different bit layouts*
 
 * the **API word** (``repro.api.flags``): ``BR_ISOLATE=1<<0``,
   ``BR_HOLD=1<<1``, ``BR_NESTED=1<<2``, ``BR_SPECULATIVE=1<<3``,
-  ``BR_NONBLOCK=1<<4``, plus the ``BR_ALL`` mask;
+  ``BR_NONBLOCK=1<<4``, ``BR_TIERED=1<<5`` (stat-only), plus the
+  ``BR_ALL`` mask;
 * the **runtime word** (``repro.core.runtime_api``): op codes
   ``BR_CREATE/BR_COMMIT/BR_ABORT`` and create-flags ``BR_STATE=1<<0``,
   ``BR_KV=1<<1``, ``BR_ISOLATE=1<<2``, ``BR_CLOSE_FDS=1<<3``.
@@ -40,7 +41,8 @@ from repro.analysis.rules.common import (SESSION_NAMES, call_method,
                                          receiver_tail)
 
 API_FLAGS = frozenset({"BR_ISOLATE", "BR_HOLD", "BR_NESTED",
-                       "BR_SPECULATIVE", "BR_NONBLOCK", "BR_ALL"})
+                       "BR_SPECULATIVE", "BR_NONBLOCK", "BR_TIERED",
+                       "BR_ALL"})
 RT_FLAGS = frozenset({"BR_CREATE", "BR_COMMIT", "BR_ABORT", "BR_STATE",
                       "BR_KV", "BR_ISOLATE", "BR_CLOSE_FDS"})
 DECLARED = API_FLAGS | RT_FLAGS

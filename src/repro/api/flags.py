@@ -23,6 +23,11 @@ flag               semantics
 ``BR_NONBLOCK``    page-budget denial returns ``-EAGAIN`` immediately
                    instead of blocking (stepping the scheduler) until
                    other work frees pages
+``BR_TIERED``      *stat-only*: reported by ``stat()`` for a branch
+                   whose KV is checkpointed out of the device pool
+                   (``session.checkpoint``); never accepted by
+                   ``branch()`` — tiering is a runtime state, not a
+                   creation mode
 =================  ======================================================
 
 These are session-level flags and intentionally a *different* namespace
@@ -39,6 +44,7 @@ BR_HOLD = 1 << 1
 BR_NESTED = 1 << 2
 BR_SPECULATIVE = 1 << 3
 BR_NONBLOCK = 1 << 4
+BR_TIERED = 1 << 5
 
 _NAMES = {
     BR_ISOLATE: "BR_ISOLATE",
@@ -46,8 +52,11 @@ _NAMES = {
     BR_NESTED: "BR_NESTED",
     BR_SPECULATIVE: "BR_SPECULATIVE",
     BR_NONBLOCK: "BR_NONBLOCK",
+    BR_TIERED: "BR_TIERED",
 }
 
+# BR_TIERED is stat-only, so it is deliberately NOT part of BR_ALL (the
+# mask of flags branch() accepts).
 BR_ALL = BR_ISOLATE | BR_HOLD | BR_NESTED | BR_SPECULATIVE | BR_NONBLOCK
 
 
@@ -63,5 +72,6 @@ __all__ = [
     "BR_NESTED",
     "BR_NONBLOCK",
     "BR_SPECULATIVE",
+    "BR_TIERED",
     "flag_names",
 ]

@@ -77,6 +77,7 @@ from repro.api.flags import (
     BR_NESTED,
     BR_NONBLOCK,
     BR_SPECULATIVE,
+    BR_TIERED,
     flag_names,
 )
 
@@ -596,7 +597,15 @@ class BranchSession:
     # ------------------------------------------------------------------
     def resume(self, hd: int, *, greedy: Optional[bool] = None,
                temperature: Optional[float] = None) -> None:
-        """Unpark a held branch (optionally pinning its sampling row)."""
+        """Unpark a held branch (optionally pinning its sampling row).
+
+        Demote-before-deny is transparent here: a branch the scheduler
+        checkpointed out under page pressure is restored first (the
+        token-identical promotion), so pacing callers never notice the
+        round trip.  When the ledger cannot re-seat it *right now* the
+        ``AdmissionDenied`` (``-EAGAIN``) surfaces to the caller as
+        honest backpressure — retry after the pool drains.
+        """
         entry = self._entry(hd)
         if entry.seq is None or not self.sched.is_tracked(entry.seq):
             return
@@ -605,13 +614,53 @@ class BranchSession:
                 entry.seq,
                 greedy=True if greedy is None else greedy,
                 temperature=1.0 if temperature is None else temperature)
-        self.sched.unhold(entry.seq)
+        if self.sched.is_checkpointed(entry.seq):
+            self.sched.restore(entry.seq, unhold=True)
+        else:
+            self.sched.unhold(entry.seq)
 
     def pause(self, hd: int) -> None:
         """Park a branch: it keeps its reservations but stops decoding."""
         entry = self._entry(hd)
         if entry.seq is not None and self.sched.is_tracked(entry.seq):
             self.sched.hold(entry.seq)
+
+    def checkpoint(self, hd: int) -> int:
+        """Demote a branch's KV out of the device pool (session verb).
+
+        Checkpoint implies :meth:`pause`: the branch is parked, its KV
+        snapshot moves to the tier store (host RAM, spilling to disk),
+        and its device pages return to the allocator — ``stat()``
+        reports ``BR_TIERED`` until :meth:`restore`.  The branch stays
+        live in the lifecycle tree; commit/abort/first-commit-wins
+        semantics are untouched (a tiered loser's snapshot dies with its
+        branch).  Returns the number of device pages freed.
+        """
+        entry = self._entry(hd)
+        self._refresh(entry)
+        if entry.seq is None or not self.sched.is_tracked(entry.seq):
+            raise BranchStateError(
+                f"handle {hd:#x} has no schedulable sequence to "
+                "checkpoint")
+        self.sched.hold(entry.seq)
+        return self.sched.checkpoint(entry.seq)
+
+    def restore(self, hd: int, *, resume: bool = False) -> None:
+        """Promote a checkpointed branch back into device pages.
+
+        Token-identical: the branch decodes exactly as if it had never
+        left the device.  Admission discipline applies — ``-EAGAIN``
+        (``AdmissionDenied``) when the ledger cannot re-seat the
+        branch's reservation right now.  With ``resume`` the branch
+        rejoins continuous batching immediately; otherwise it stays
+        parked (the :meth:`pause` state checkpoint implied).
+        """
+        entry = self._entry(hd)
+        self._refresh(entry)
+        if entry.seq is None or not self.sched.is_tracked(entry.seq):
+            raise BranchStateError(
+                f"handle {hd:#x} has no schedulable sequence to restore")
+        self.sched.restore(entry.seq, unhold=resume)
 
     def produced(self, hd: int) -> int:
         """Tokens generated past the owning request's prompt (0 if the
@@ -783,13 +832,16 @@ class BranchSession:
         self._refresh(entry)
         status = self.status(hd)
         in_tree = entry.seq is not None and entry.seq in self.engine.kv.tree
+        tiered = in_tree and self.engine.kv.is_tiered(entry.seq)
         return {
             "hd": entry.hd,
             "seq": entry.seq,
             "req_id": entry.req_id,
             "parent": entry.parent_hd,
             "depth": entry.depth,
-            "flags": flag_names(entry.flags),
+            # BR_TIERED is a runtime state, not a creation flag: it
+            # appears here while the branch is checkpointed out
+            "flags": flag_names(entry.flags | (BR_TIERED if tiered else 0)),
             "events": event_names(entry.events),
             "status": status.value if status is not None else "reaped",
             "resolved": entry.resolved,
@@ -801,6 +853,7 @@ class BranchSession:
                                if entry.seq is not None else 0),
             "held": (entry.seq is not None
                      and self.sched.is_held(entry.seq)),
+            "tiered": tiered,
         }
 
     def tree(self) -> Dict[str, Any]:
@@ -823,6 +876,7 @@ class BranchSession:
                 "waiting": st["waiting"],
                 "running": st["running"],
                 "held": st["held"],
+                "checkpointed": st.get("checkpointed", 0),
                 "tp": st.get("tp", 1),
             },
             "handles": {

@@ -37,6 +37,7 @@ from repro.core.explore import (
     select_branch,
 )
 from repro.core.kvbranch import AppendSlot, CowOp, KVBranchManager, SeqStatus
+from repro.core.kvtier import KVSnapshot, KVTierStore
 from repro.core.runtime_api import (
     BR_ABORT,
     BR_CLOSE_FDS,
@@ -59,6 +60,7 @@ __all__ = [
     "ExploreResult", "explore", "explore_threads", "first_commit_wins",
     "fork_stacked", "perturbed_fork", "select_branch",
     "AppendSlot", "CowOp", "KVBranchManager", "SeqStatus",
+    "KVSnapshot", "KVTierStore",
     "BR_ABORT", "BR_CLOSE_FDS", "BR_COMMIT", "BR_CREATE", "BR_ISOLATE",
     "BR_KV", "BR_STATE", "BranchHandle", "BranchRuntime",
     "TOMBSTONE", "BranchStatus", "BranchStore",

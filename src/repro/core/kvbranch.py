@@ -33,12 +33,20 @@ functionally (``jax.Array.at``) or by the Pallas paged-attention kernel.
 
 from __future__ import annotations
 
+import hashlib
+from collections import Counter
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.errors import FrozenOriginError, PoolExhausted
+from repro.core.errors import (
+    BranchError,
+    BranchStateError,
+    Errno,
+    FrozenOriginError,
+    PoolExhausted,
+)
 from repro.core.lifecycle import LIVE, BranchStatus, BranchTree
 from repro.obs import Observability
 
@@ -81,10 +89,15 @@ class KVBranchManager:
         self._c_commits = m.counter("kv.commits")
         self._c_aborts = m.counter("kv.aborts")
         self._c_invalidations = m.counter("kv.invalidations")
+        self._c_prefix_hits = m.counter("kv.prefix_hits")
+        self._c_prefix_misses = m.counter("kv.prefix_misses")
+        self._c_prefix_evictions = m.counter("kv.prefix_evictions")
         self._g_free = m.gauge("kv.pages_free")
         self._g_free.set(num_pages)
         self._g_shared = m.gauge("kv.pages_shared")
         self._g_util = m.gauge("kv.pool_utilization")
+        self._g_prefix_shared = m.gauge("kv.prefix_pages_shared")
+        self._g_tiered = m.gauge("kv.pages_tiered")
         # incremental shared-page count (refcount 1<->2 crossings), so
         # the gauge never pays the O(num_pages) scan stats() does
         self._shared_pages = 0
@@ -97,6 +110,22 @@ class KVBranchManager:
         self._tree.attach(self)
         self._tables: Dict[int, List[int]] = {}
         self._lengths: Dict[int, int] = {}
+        # Cross-request prefix cache: chained content hash of a prompt's
+        # page-aligned token runs -> the page already holding that KV
+        # (the gitstore idiom: content addresses, not positions).  Each
+        # entry holds ONE page reference of its own, so a registered
+        # page survives the request that wrote it and any later append
+        # by an adopter CoWs away from it.  Evicted LRU-first when the
+        # free list runs dry — the cache is reclaimable, never a
+        # commitment.
+        self._prefix_pages: Dict[str, int] = {}
+        self._prefix_lru: Dict[str, int] = {}
+        self._prefix_tick = 0
+        # Tiered (demoted) branches: still live in the lifecycle tree,
+        # but their pages were checkpointed out of the device pool (the
+        # snapshot lives in a KVTierStore).  Maps seq id -> page count
+        # needed to promote it back.
+        self._tiered_pages: Dict[int, int] = {}
 
     @property
     def tree(self) -> BranchTree:
@@ -116,11 +145,31 @@ class KVBranchManager:
 
     def _alloc_page(self) -> int:
         if not self._free:
+            # Reclaim before refusing: prefix-cache pages whose only
+            # remaining reference is the cache's own are recyclable.
+            self._evict_prefixes()
+        if not self._free:
             raise PoolExhausted("KV page pool exhausted (-ENOSPC)")
         page = self._free.pop()
         self._refcount[page] = 1
         self._update_pool_gauges()
         return page
+
+    def _evict_prefixes(self) -> None:
+        """Drop LRU prefix-cache entries until a page frees (or none left).
+
+        Dropping an entry releases the cache's reference; the page only
+        actually returns to the free list if no live table still shares
+        it — entries still backing live sequences are cheap to drop and
+        re-register, so LRU order need not care.
+        """
+        while self._prefix_pages and not self._free:
+            key = min(self._prefix_lru, key=self._prefix_lru.__getitem__)
+            page = self._prefix_pages.pop(key)
+            del self._prefix_lru[key]
+            self._c_prefix_evictions.inc()
+            self._decref([page])
+        self._g_prefix_shared.set(len(self._prefix_pages))
 
     def _update_pool_gauges(self) -> None:
         free = len(self._free)
@@ -136,6 +185,25 @@ class KVBranchManager:
             self._g_shared.set(self._shared_pages)
 
     def _decref(self, pages: Sequence[int]) -> None:
+        # Validate EVERY release before mutating anything: a double
+        # release must fail with the allocator untouched.  The old guard
+        # was a bare assert placed *after* the page had already
+        # re-entered the free list — under ``python -O`` the assert
+        # vanished and a doubly-freed page could be handed to two live
+        # sequences.  Occurrence-aware: a page appearing k times in
+        # ``pages`` needs k outstanding references.
+        if len(pages) == 1:     # hot path (CoW faults, tail trims)
+            occurrences = {pages[0]: 1} if self._refcount[pages[0]] < 1 \
+                else {}
+        else:
+            occurrences = Counter(pages)
+        for p, k in occurrences.items():
+            have = int(self._refcount[p])
+            if have < k:
+                raise BranchError(
+                    f"double release of page {p}: {k} release(s) "
+                    f"requested but refcount is {have}; tables and free "
+                    "list left untouched (-EINVAL)", errno=Errno.EINVAL)
         freed = False
         for p in pages:
             self._refcount[p] -= 1
@@ -144,7 +212,6 @@ class KVBranchManager:
             elif self._refcount[p] == 0:
                 self._free.append(p)
                 freed = True
-            assert self._refcount[p] >= 0, f"page {p} refcount underflow"
         if pages:
             self._g_shared.set(self._shared_pages)
             if freed:
@@ -190,12 +257,18 @@ class KVBranchManager:
             self._decref(table)
         self._lengths.pop(branch, None)
         self._invalidated_once.discard(branch)
+        self._drop_tiered(branch)
 
     def _release_pages(self, branch: int) -> None:
         table = self._tables.get(branch)
         if table:
             self._decref(table)
         self._tables[branch] = []
+        self._drop_tiered(branch)
+
+    def _drop_tiered(self, branch: int) -> None:
+        if self._tiered_pages.pop(branch, None) is not None:
+            self._g_tiered.set(sum(self._tiered_pages.values()))
 
     # ------------------------------------------------------------------
     # sequence lifecycle (delegated to the kernel)
@@ -206,15 +279,147 @@ class KVBranchManager:
     def status(self, seq_id: int) -> BranchStatus:
         return self._tree.status(seq_id)
 
-    def new_seq(self, length: int = 0) -> int:
-        """Create a root sequence with enough pages for ``length`` tokens."""
+    def new_seq(self, length: int = 0, *,
+                prefix_pages: Optional[Sequence[int]] = None) -> int:
+        """Create a root sequence with enough pages for ``length`` tokens.
+
+        ``prefix_pages`` (from :meth:`match_prefix`) seeds the head of
+        the block table with shared, CoW-protected pages — each gains a
+        reference here, atomically with the fresh-tail allocation.  The
+        call is transactional: pool exhaustion mid-allocation releases
+        everything taken so far and re-raises, mutating nothing.
+        """
         with self._tree.lock:
             n_pages = -(-max(length, 0) // self.page_size)
-            table = [self._alloc_page() for _ in range(n_pages)]
+            shared = list(prefix_pages or ())
+            if len(shared) > n_pages:
+                raise BranchError(
+                    f"{len(shared)} prefix pages exceed the {n_pages}-page "
+                    f"table for {length} tokens (-EINVAL)",
+                    errno=Errno.EINVAL)
+            self._incref(shared)
+            fresh: List[int] = []
+            try:
+                for _ in range(n_pages - len(shared)):
+                    fresh.append(self._alloc_page())
+            except PoolExhausted:
+                self._decref(fresh)
+                self._decref(shared)
+                raise
             sid = self._tree.create_root()
-            self._tables[sid] = table
+            self._tables[sid] = shared + fresh
             self._lengths[sid] = length
             return sid
+
+    # ------------------------------------------------------------------
+    # cross-request prefix sharing (content-addressed page runs)
+    # ------------------------------------------------------------------
+    def _prefix_keys(self, tokens: Sequence[int]) -> List[str]:
+        """Chained content key per FULL page of ``tokens``.
+
+        Chained (each page's key folds in every preceding page) so a
+        page is only shareable when the *entire* prefix up to it
+        matches — position-independent content addressing would alias
+        different contexts onto one KV page.
+        """
+        keys: List[str] = []
+        h = hashlib.sha1()
+        ps = self.page_size
+        for i in range(len(tokens) // ps):
+            h.update(np.asarray(tokens[i * ps:(i + 1) * ps],
+                                dtype=np.int64).tobytes())
+            keys.append(h.hexdigest())
+        return keys
+
+    def _tail_key(self, tokens: Sequence[int]) -> Optional[str]:
+        """Key for a partially-filled tail page, or ``None`` if aligned.
+
+        Keyed on the whole prefix *and* its exact length, so a cached
+        tail only ever matches a byte-identical full prompt — partial
+        tail pages contain fewer valid tokens than their page claims,
+        and sharing them on anything less than an exact match would
+        serve garbage KV.
+        """
+        tail = len(tokens) % self.page_size
+        if tail == 0:
+            return None
+        h = hashlib.sha1()
+        h.update(np.asarray(tokens, dtype=np.int64).tobytes())
+        return f"tail:{len(tokens)}:{h.hexdigest()}"
+
+    def match_prefix(self, tokens: Sequence[int]) -> Tuple[List[int], int]:
+        """Longest cached run of shared pages covering a prefix of ``tokens``.
+
+        Returns ``(pages, covered_tokens)``.  Full pages match from page
+        0 outward; a cached partial tail page additionally matches only
+        when it completes an *exact* whole-prompt hit (then ``covered ==
+        len(tokens)`` and the adopter needs no prefill at all).  The
+        returned pages are not referenced yet — adopt them atomically
+        via ``new_seq(length, prefix_pages=pages)``.
+        """
+        with self._tree.lock:
+            pages: List[int] = []
+            keys = self._prefix_keys(tokens)
+            for key in keys:
+                page = self._prefix_pages.get(key)
+                if page is None:
+                    break
+                self._prefix_tick += 1
+                self._prefix_lru[key] = self._prefix_tick
+                pages.append(page)
+            covered = len(pages) * self.page_size
+            if len(pages) == len(keys) and covered < len(tokens):
+                tkey = self._tail_key(tokens)
+                page = None if tkey is None else self._prefix_pages.get(tkey)
+                if page is not None:
+                    self._prefix_tick += 1
+                    self._prefix_lru[tkey] = self._prefix_tick
+                    pages.append(page)
+                    covered = len(tokens)
+            if covered:
+                self._c_prefix_hits.inc()
+            else:
+                self._c_prefix_misses.inc()
+            return pages, covered
+
+    def register_prefix(self, seq_id: int, tokens: Sequence[int]) -> int:
+        """Publish ``seq_id``'s prompt pages for cross-request sharing.
+
+        ``tokens`` must be the prompt whose KV currently fills the head
+        of ``seq_id``'s block table.  Every not-yet-cached full page —
+        plus the partial tail page, under its exact-match-only key —
+        gains one cache-owned reference.  Returns the number of pages
+        newly registered.  Registering a page that later CoWs away from
+        its writer is fine: the cache's copy keeps the original bytes.
+        """
+        with self._tree.lock:
+            self._tree.node(seq_id)
+            table = self._tables[seq_id]
+            added = 0
+
+            def _put(key: str, page: int) -> None:
+                self._incref([page])
+                self._prefix_pages[key] = page
+                self._prefix_tick += 1
+                self._prefix_lru[key] = self._prefix_tick
+
+            keys = self._prefix_keys(tokens)
+            for i, key in enumerate(keys):
+                if key in self._prefix_pages or i >= len(table):
+                    continue
+                _put(key, table[i])
+                added += 1
+            tkey = self._tail_key(tokens)
+            if (tkey is not None and tkey not in self._prefix_pages
+                    and len(table) > len(keys)):
+                _put(tkey, table[len(keys)])
+                added += 1
+            if added:
+                self._g_prefix_shared.set(len(self._prefix_pages))
+            return added
+
+    def prefix_cache_size(self) -> int:
+        return len(self._prefix_pages)
 
     def length(self, seq_id: int) -> int:
         self._tree.node(seq_id)
@@ -233,7 +438,9 @@ class KVBranchManager:
         O(table length) integer work, zero HBM traffic; the parent becomes
         a frozen origin until all children resolve.
         """
-        return self._tree.fork(seq_id, n)
+        with self._tree.lock:
+            self._check_not_tiered(seq_id)
+            return self._tree.fork(seq_id, n)
 
     def fork_batch(self, seq_id: int,
                    n: int = 1) -> Tuple[List[int], List[CowOp]]:
@@ -259,6 +466,7 @@ class KVBranchManager:
         one CoW'd tail page per child.
         """
         with self._tree.lock:
+            self._check_not_tiered(seq_id)
             children = self._tree.fork(seq_id, n)
             ops: List[CowOp] = []
             table = self._tables[seq_id]
@@ -291,6 +499,7 @@ class KVBranchManager:
             if node.status is BranchStatus.FROZEN:
                 raise FrozenOriginError(
                     f"sequence {seq_id} has live children and is frozen")
+            self._check_not_tiered(seq_id)
             table = self._tables[seq_id]
             slots: List[AppendSlot] = []
             try:
@@ -381,6 +590,7 @@ class KVBranchManager:
             if node.status is BranchStatus.FROZEN:
                 raise FrozenOriginError(
                     f"sequence {seq_id} has live children and is frozen")
+            self._check_not_tiered(seq_id)
             if new_length < 0 or new_length > self._lengths[seq_id]:
                 raise ValueError(
                     f"cannot truncate sequence {seq_id} from "
@@ -399,7 +609,11 @@ class KVBranchManager:
         Returns the parent sequence id (which resumes ACTIVE with the
         child's content, PID-takeover style).
         """
-        return self._tree.commit(seq_id)
+        with self._tree.lock:
+            # A tiered child has an empty table; committing it would
+            # strip the parent's pages and adopt nothing.
+            self._check_not_tiered(seq_id)
+            return self._tree.commit(seq_id)
 
     def abort(self, seq_id: int) -> None:
         """Discard the branch; siblings stay valid; parent may resume."""
@@ -418,6 +632,70 @@ class KVBranchManager:
             self._tree.reap(seq_id)
 
     # ------------------------------------------------------------------
+    # tiering (device -> host/disk demotion, BR_TIERED)
+    # ------------------------------------------------------------------
+    def _check_not_tiered(self, seq_id: int) -> None:
+        if seq_id in self._tiered_pages:
+            raise BranchError(
+                f"sequence {seq_id} is tiered out (pages checkpointed to "
+                "a lower tier); restore it before operating on its KV "
+                "(-EAGAIN)", errno=Errno.EAGAIN)
+
+    def is_tiered(self, seq_id: int) -> bool:
+        return seq_id in self._tiered_pages
+
+    def demote(self, seq_id: int) -> List[int]:
+        """Release a live branch's device pages for tiering.
+
+        The branch stays live in the lifecycle tree (its length and
+        node survive; first-commit-wins semantics are untouched) but its
+        block table is emptied and every page reference dropped — the
+        caller must have snapshotted the page contents first (the
+        engine's ``checkpoint`` does).  Returns the old table so the
+        caller can gather pages *before* calling, or audit after.
+        """
+        with self._tree.lock:
+            self._tree.check_live(seq_id)
+            if seq_id in self._tiered_pages:
+                raise BranchStateError(f"sequence {seq_id} is already tiered")
+            if self._tree.has_live_children(seq_id):
+                raise BranchError(
+                    f"sequence {seq_id} has live children sharing its "
+                    "pages; demote the leaves instead (-EBUSY)",
+                    errno=Errno.EBUSY)
+            table = self._tables[seq_id]
+            pages = list(table)
+            self._decref(table)
+            self._tables[seq_id] = []
+            self._tiered_pages[seq_id] = len(pages)
+            self._g_tiered.set(sum(self._tiered_pages.values()))
+            return pages
+
+    def promote(self, seq_id: int) -> List[int]:
+        """Re-seat a tiered branch: allocate a fresh block table.
+
+        Transactional — pool exhaustion mid-allocation frees everything
+        taken and re-raises with the branch still tiered, so the caller
+        can demote something else and retry.  The caller scatters the
+        snapshot back into the returned pages.
+        """
+        with self._tree.lock:
+            self._tree.check_live(seq_id)
+            if seq_id not in self._tiered_pages:
+                raise BranchStateError(f"sequence {seq_id} is not tiered")
+            fresh: List[int] = []
+            try:
+                for _ in range(self._tiered_pages[seq_id]):
+                    fresh.append(self._alloc_page())
+            except PoolExhausted:
+                self._decref(fresh)
+                raise
+            self._tables[seq_id] = fresh
+            del self._tiered_pages[seq_id]
+            self._g_tiered.set(sum(self._tiered_pages.values()))
+            return fresh
+
+    # ------------------------------------------------------------------
     # dense views for the device step
     # ------------------------------------------------------------------
     def dense_block_tables(
@@ -429,6 +707,7 @@ class KVBranchManager:
         lens = np.zeros((len(seq_ids),), dtype=np.int32)
         for i, sid in enumerate(seq_ids):
             self._tree.node(sid)
+            self._check_not_tiered(sid)
             table = self._tables[sid]
             if len(table) > max_pages:
                 raise ValueError(
@@ -452,6 +731,9 @@ class KVBranchManager:
             "pages_total": self.num_pages,
             "pages_free": len(self._free),
             "pages_shared": int((self._refcount > 1).sum()),
+            "prefix_pages_cached": len(self._prefix_pages),
+            "sequences_tiered": len(self._tiered_pages),
+            "pages_tiered": sum(self._tiered_pages.values()),
         }
 
 

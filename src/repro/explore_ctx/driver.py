@@ -126,6 +126,36 @@ class _WaitFork:
         return True, kids
 
 
+class _WaitDecode:
+    """A Decode whose demoted context cannot be re-seated yet.
+
+    The scheduler may checkpoint a held branch out of the device pool
+    to admit new work (demote-before-deny); resuming it restores the
+    snapshot, and that restore is budget-checked.  Until it is
+    admitted, the whole Decode retries with backpressure — mirroring
+    ``_WaitFork`` — then delegates to the token wait it finally starts.
+    """
+
+    def __init__(self, item: Decode, g_row: List[Any], t_row: List[Any]):
+        self.item = item
+        self.g_row = g_row
+        self.t_row = t_row
+        self.attempts = 0
+        self.inner: Optional["_WaitTokens"] = None
+
+    def poll(self, drv: "ExplorationDriver") -> Tuple[bool, Any]:
+        if self.inner is None:
+            try:
+                self.inner = drv._start_decode(self.item, self.g_row,
+                                               self.t_row)
+            except AdmissionDenied:
+                self.attempts += 1
+                return False, None
+            if self.inner is None:      # every context resolved meanwhile
+                return True, None
+        return self.inner.poll(drv)
+
+
 class _WaitTokens:
     def __init__(self, waiter: Waiter, ctxs: Sequence[BranchContext]):
         self.waiter = waiter
@@ -311,19 +341,17 @@ class ExplorationDriver:
                     value, error = None, ValueError(
                         "Decode sampling rows must match its contexts")
                     continue
-                waiter = Waiter(self.session)
-                active: List[BranchContext] = []
-                for ctx, g, t in zip(item.ctxs, g_row, t_row):
-                    if not self.session.tracked(ctx.hd):
-                        continue   # already resolved: nothing to decode
-                    target = self.session.produced(ctx.hd) + item.tokens
-                    self.session.resume(ctx.hd, greedy=g, temperature=t)
-                    waiter.add(ctx.hd, events=0, produced=target)
-                    active.append(ctx)
-                if not active:
-                    value = None
+                try:
+                    wait = self._start_decode(item, g_row, t_row)
+                except AdmissionDenied:
+                    # a demoted context cannot re-seat yet: retry with
+                    # backpressure, like a fork under page pressure
+                    exp.wait = _WaitDecode(item, g_row, t_row)
+                    return
+                if wait is None:
+                    value = None   # every context already resolved
                     continue
-                exp.wait = _WaitTokens(waiter, active)
+                exp.wait = wait
                 return
             elif isinstance(item, Tick):
                 exp.wait = _WaitSteps(self.steps + item.steps)
@@ -342,6 +370,34 @@ class ExplorationDriver:
             # finish releases the subtree across every domain, reaps the
             # composite store branch, and closes all of its handles
             exp.final_tokens = self.session.finish(exp.hd)
+
+    def _start_decode(self, item: Decode, g_row: List[Any],
+                      t_row: List[Any]) -> Optional["_WaitTokens"]:
+        """Unpark + tag every still-tracked context of a Decode.
+
+        Returns the token wait, or ``None`` when every context resolved
+        meanwhile.  Transactional against restore backpressure: if a
+        demoted context's re-seat is denied (``AdmissionDenied`` out of
+        ``session.resume``), everything already unparked is re-held and
+        the denial re-raised so the caller can retry the whole Decode.
+        """
+        waiter = Waiter(self.session)
+        active: List[BranchContext] = []
+        try:
+            for ctx, g, t in zip(item.ctxs, g_row, t_row):
+                if not self.session.tracked(ctx.hd):
+                    continue   # already resolved: nothing to decode
+                target = self.session.produced(ctx.hd) + item.tokens
+                self.session.resume(ctx.hd, greedy=g, temperature=t)
+                waiter.add(ctx.hd, events=0, produced=target)
+                active.append(ctx)
+        except AdmissionDenied:
+            for ctx in active:
+                self.session.pause(ctx.hd)
+            raise
+        if not active:
+            return None
+        return _WaitTokens(waiter, active)
 
     def _fail(self, exp: Exploration, err: BaseException) -> None:
         exp.error = err

@@ -140,7 +140,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
         model_flops_for,
     )
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
               "status": "ok"}
     lowered, mesh, cfg, skip_reason = build_lowered(
@@ -153,10 +153,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
             json.dumps(record, indent=2))
         print(f"SKIP {arch} × {shape_name} × {mesh_kind}: {skip_reason}")
         return record
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
 
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     print(f"memory_analysis: {mem}")        # proves it fits

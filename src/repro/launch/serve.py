@@ -60,6 +60,11 @@ def main(argv=None) -> int:
                          "get the default class)")
     ap.add_argument("--num-pages", type=int, default=1024,
                     help="KV page-pool size (default 1024)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request KV prefix sharing "
+                         "(on by default: identical prompt prefixes "
+                         "share read-only CoW pages, so best-of-N from "
+                         "N users costs one prefill)")
     args = ap.parse_args(argv)
 
     from repro.api import BranchSession
@@ -77,6 +82,7 @@ def main(argv=None) -> int:
     params = model.init(jax.random.PRNGKey(0))
     engine = ServeEngine(model, params, num_pages=args.num_pages,
                          page_size=8, max_pages_per_seq=64, tp=args.tp,
+                         prefix_cache=not args.no_prefix_cache,
                          obs=Observability(trace=args.trace is not None))
     session = BranchSession(engine, max_batch=args.max_batch, seed=1)
     if session.tp > 1:

@@ -97,6 +97,10 @@ class Scheduler:
         # their reservations) but neither decoded nor auto-retired until
         # released — the policy, not the budget, decides their pace
         self._holds: set = set()
+        # reservations of checkpointed (tiered) sequences: moved out of
+        # the live ledger — their device pages are freed — and moved
+        # back at restore() after a budget re-check
+        self._tiered_reserved: Dict[int, int] = {}
         # per-sequence sampling overrides: seq -> (greedy, temperature)
         self._sampling: Dict[int, tuple] = {}
         self._key = jax.random.PRNGKey(self.config.seed)
@@ -111,6 +115,8 @@ class Scheduler:
         self._c_forks_admitted = m.counter("sched.forks_admitted")
         self._c_forks_denied = m.counter("sched.forks_denied")
         self._c_retired = m.counter("sched.retired")
+        self._c_demotions = m.counter("sched.demotions")
+        self._c_restores = m.counter("sched.restores")
         self._h_admission_wait = m.histogram("sched.admission_wait_us")
         self._g_reserved = m.gauge("sched.pages_reserved")
 
@@ -168,12 +174,40 @@ class Scheduler:
         self._waiting.append(req)
         return req.req_id
 
+    def _demote_for(self, deficit: int) -> int:
+        """Checkpoint held branches until ``deficit`` reservation pages
+        free up (demote-before-deny).  Held branches are the coldest
+        work the scheduler owns — parking them in the tier store instead
+        of denying the FIFO head turns page pressure into host/disk
+        bytes.  Branches that cannot demote (frozen origins, already
+        tiered) are skipped.  Returns the reservation pages released.
+        """
+        released = 0
+        for seq in sorted(s for s in self._holds if s in self._reserved):
+            if released >= deficit:
+                break
+            worst = self._reserved[seq]
+            try:
+                self.checkpoint(seq)
+            except BranchError:
+                continue
+            released += worst
+        return released
+
     def admit(self) -> List[int]:
-        """Admit waiting requests in FIFO order while reservations fit."""
+        """Admit waiting requests in FIFO order while reservations fit.
+
+        When the head request does not fit, held branches are demoted to
+        the tier store before the head is made to wait (demote-before-
+        deny) — admission is denied only once nothing else can move.
+        """
         admitted: List[int] = []
         while self._waiting:
             req = self._waiting[0]
             budget = self.engine.kv.num_pages - self._pages_reserved()
+            if req.worst_pages > budget:
+                self._demote_for(req.worst_pages - budget)
+                budget = self.engine.kv.num_pages - self._pages_reserved()
             if req.worst_pages > budget:
                 break   # FIFO: do not starve the head request
             self._waiting.pop(0)
@@ -261,10 +295,73 @@ class Scheduler:
         self._holds.add(seq)
 
     def unhold(self, seq: int) -> None:
+        if seq in self._tiered_reserved:
+            raise BranchError(
+                f"sequence {seq} is checkpointed to the tier store; "
+                "restore() it before unholding (-EAGAIN)",
+                errno=Errno.EAGAIN)
         self._holds.discard(seq)
 
     def is_held(self, seq: int) -> bool:
         return seq in self._holds
+
+    # ------------------------------------------------------------------
+    # tiering (checkpoint / restore with ledger movement)
+    # ------------------------------------------------------------------
+    def checkpoint(self, seq: int) -> int:
+        """Demote a tracked, held branch's KV to the tier store.
+
+        The branch's reservation leaves the live ledger (its device
+        pages are freed), so the pages it was holding become admissible
+        budget; the reservation is remembered and re-checked at
+        :meth:`restore`.  Only held branches may checkpoint — a decoding
+        branch would just fault straight back in.  Returns the number of
+        device pages freed.
+        """
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        if seq not in self._holds:
+            raise BranchError(
+                f"sequence {seq} must be held before checkpoint; a "
+                "running branch cannot leave the device (-EINVAL)",
+                errno=Errno.EINVAL)
+        n = self.engine.checkpoint(seq)
+        worst = self._reserved.pop(seq, 0)
+        self._tiered_reserved[seq] = worst
+        self._g_reserved.set(self._pages_reserved())
+        self._c_demotions.inc()
+        return n
+
+    def restore(self, seq: int, *, unhold: bool = False) -> None:
+        """Promote a tiered branch back into device pages.
+
+        Re-checks the reservation against the live ledger first —
+        restoring must honor the same admission discipline as new work
+        (``AdmissionDenied``/-EAGAIN when it does not fit; demote or
+        retire something and retry).  With ``unhold`` the branch rejoins
+        continuous batching immediately.
+        """
+        if seq not in self._seq_owner:
+            raise BranchError(f"sequence {seq} is not scheduled here")
+        worst = self._tiered_reserved.get(seq)
+        if worst is None:
+            raise BranchError(
+                f"sequence {seq} is not tiered (-EINVAL)",
+                errno=Errno.EINVAL)
+        budget = self.engine.kv.num_pages - self._pages_reserved()
+        if worst > budget:
+            raise AdmissionDenied(
+                f"restoring sequence {seq} needs {worst} reserved pages, "
+                f"budget is {budget} (-EAGAIN)")
+        self.engine.restore(seq)
+        self._reserved[seq] = self._tiered_reserved.pop(seq)
+        self._g_reserved.set(self._pages_reserved())
+        self._c_restores.inc()
+        if unhold:
+            self._holds.discard(seq)
+
+    def is_checkpointed(self, seq: int) -> bool:
+        return seq in self._tiered_reserved
 
     def set_sampling(self, seq: int, *, greedy: bool = True,
                      temperature: float = 1.0) -> None:
@@ -351,6 +448,7 @@ class Scheduler:
         rid = self._seq_owner.pop(seq, None)
         if self._reserved.pop(seq, None) is not None:
             self._g_reserved.set(self._pages_reserved())
+        self._tiered_reserved.pop(seq, None)
         self._holds.discard(seq)
         self._sampling.pop(seq, None)
         if rid is not None:
@@ -557,6 +655,7 @@ class Scheduler:
         st.update(steps=self.steps, tokens_generated=self.tokens_generated,
                   waiting=len(self._waiting), running=len(self._seq_owner),
                   held=len(self._holds),
+                  checkpointed=len(self._tiered_reserved),
                   pages_reserved=self._pages_reserved())
         return st
 

@@ -71,6 +71,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import KVBranchManager
+from repro.core.kvtier import KVSnapshot, KVTierStore
 from repro.distributed.compat import shard_map
 from repro.distributed.mesh import ParallelPlan, serving_mesh, serving_plan
 from repro.distributed.sharding import kv_page_spec, serve_param_specs
@@ -455,6 +456,84 @@ def paged_verify_step(
                         lengths, tokens, k_scales, v_scales, impl=impl)
 
 
+def _prefix_body(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # [b, max_pages] — prefix pages + fresh tail
+    lengths: jax.Array,       # [b] tokens already cached (the shared prefix)
+    tokens: jax.Array,        # [b, t] suffix tokens to prefill
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    *,
+    impl: str,
+    axis_name: Optional[str] = None,
+):
+    """Suffix ("chunk") prefill over an already-cached shared prefix.
+
+    The prefix-cache counterpart of :func:`_verify_body`: every suffix
+    position attends to the cached prefix through the block table plus
+    the in-chunk causal window, but instead of logits the pass returns
+    the suffix's per-layer K/V (stacked ``[L, b, t, kv, hd]``) for the
+    host to scatter into the sequence's fresh tail pages.  A request
+    whose prompt shares ``lengths`` tokens with the cache pays one
+    dispatch over ``t = prompt - shared`` positions instead of a dense
+    prefill over the whole prompt.
+    """
+    b, t = tokens.shape
+    h = embed_tokens(cfg, params, tokens)
+    positions = lengths[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    quant = k_scales is not None
+    page_map = jnp.arange(k_pages.shape[1], dtype=jnp.int32)
+
+    def combine(x):
+        return jax.lax.psum(x, axis_name) if axis_name else x
+
+    def body(h, xs):
+        if quant:
+            lp, kp, vp, ks, vs = xs
+        else:
+            lp, kp, vp = xs
+            ks = vs = None
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.qkv_project(cfg, lp["attn"], x, positions)
+        kvh = k.shape[2]
+        g = q.shape[2] // kvh
+        qc = q.reshape(b, t, kvh, g, cfg.head_dim)
+        a = paged_chunk_attention(qc, k, v, kp, vp, block_tables,
+                                  lengths, page_map, ks, vs, impl=impl)
+        a = a.reshape(b, t, kvh * g, cfg.head_dim)
+        h = h + combine(jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"]))
+        x = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + _ffn(cfg, lp, x, combine, axis_name)
+        return h, (k, v)
+
+    xs = ((params["layers"], k_pages, v_pages, k_scales, v_scales)
+          if quant else (params["layers"], k_pages, v_pages))
+    _, (k_new, v_new) = jax.lax.scan(body, h, xs)
+    return k_new, v_new
+
+
+@partial(jax.jit, static_argnames=("cfg", "impl"))
+def paged_prefix_step(
+    cfg: ArchConfig,
+    params: Any,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    tokens: jax.Array,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    impl: str = "ref",
+):
+    """Suffix prefill over a shared prefix (single device): per-layer
+    K/V for the suffix, ``[L, b, t, kv, hd]`` each."""
+    return _prefix_body(cfg, params, k_pages, v_pages, block_tables,
+                        lengths, tokens, k_scales, v_scales, impl=impl)
+
+
 def scale_spec(plan: ParallelPlan) -> P:
     """Spec for int8 dequant scales [L, n_pages, kv]: shard the kv-head
     dim exactly like the pools, so each shard's scales stay consistent
@@ -553,6 +632,40 @@ def build_tp_verify_step(cfg: ArchConfig, plan: ParallelPlan, params: Any,
 
     fn = shard_map(local_step, mesh=plan.mesh, in_specs=in_specs,
                    out_specs=rep, check_rep=False)
+    return jax.jit(fn)
+
+
+def build_tp_prefix_step(cfg: ArchConfig, plan: ParallelPlan, params: Any,
+                         *, impl: str = "ref",
+                         specs: Optional[Any] = None,
+                         quantized: bool = False):
+    """The tensor-parallel suffix-prefill step: pools read sharded on the
+    kv-head dim, and the returned suffix K/V stays sharded the same way
+    (``[L, b, t, kv_local, hd]`` per shard) so the host scatter into the
+    sharded pools never regathers heads."""
+    if specs is None:
+        specs = serve_specs(cfg, plan, params)
+    kv_spec = kv_page_spec(plan)
+    sc_spec = scale_spec(plan)
+    rep = P()
+    new_kv_spec = P(None, None, None, plan.tp_axis)
+
+    if quantized:
+        def local_step(p, kp, vp, ks, vs, bt, lengths, tokens):
+            return _prefix_body(cfg, p, kp, vp, bt, lengths, tokens,
+                                ks, vs, impl=impl, axis_name=plan.tp_axis)
+
+        in_specs = (specs, kv_spec, kv_spec, sc_spec, sc_spec,
+                    rep, rep, rep)
+    else:
+        def local_step(p, kp, vp, bt, lengths, tokens):
+            return _prefix_body(cfg, p, kp, vp, bt, lengths, tokens,
+                                impl=impl, axis_name=plan.tp_axis)
+
+        in_specs = (specs, kv_spec, kv_spec, rep, rep, rep)
+
+    fn = shard_map(local_step, mesh=plan.mesh, in_specs=in_specs,
+                   out_specs=(new_kv_spec, new_kv_spec), check_rep=False)
     return jax.jit(fn)
 
 
@@ -670,6 +783,9 @@ class ServeEngine:
                  page_size: int = 16, max_pages_per_seq: int = 32,
                  attn_impl: str = "auto", kv_dtype: Optional[str] = None,
                  mesh: Optional[Mesh] = None, tp: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 tier_host_bytes: int = 64 << 20,
+                 tier_disk_dir: Optional[str] = None,
                  obs: Optional[Observability] = None):
         cfg = model.cfg
         assert cfg.family in ("dense", "vlm", "audio", "moe"), (
@@ -769,9 +885,23 @@ class ServeEngine:
             self._tp_verify = build_tp_verify_step(
                 cfg, self.plan, params, impl=self._chunk_impl,
                 specs=specs, quantized=self.quantized)
+            self._tp_prefix = build_tp_prefix_step(
+                cfg, self.plan, params, impl=self._chunk_impl,
+                specs=specs, quantized=self.quantized)
         else:
             self._tp_step = None
             self._tp_verify = None
+            self._tp_prefix = None
+        # Cross-request prefix sharing: opt-in because the cache retains
+        # page references past release (exact pool accounting changes);
+        # the serving front door turns it on — raw-engine users keep the
+        # one-request-one-prefill contract unless they ask.
+        self.prefix_cache = prefix_cache
+        # Tiered snapshot store (device -> host -> disk); attached to the
+        # lifecycle tree so snapshots die with their branch.
+        self.tier = KVTierStore(host_bytes=tier_host_bytes,
+                                disk_dir=tier_disk_dir, obs=self.obs)
+        self.kv.tree.attach(self.tier)
         # Token tails ride the same lifecycle kernel as the page tables:
         # kv.commit/abort/invalidate resolves both domains atomically.
         self.token_domain = TokenDomain()
@@ -786,9 +916,12 @@ class ServeEngine:
         self._c_verify_dispatches = m.counter("engine.verify_dispatches")
         self._c_decode_steps = m.counter("engine.decode_steps")
         self._c_tokens = m.counter("engine.tokens_decoded")
+        self._c_prefill_dispatches = m.counter("engine.prefill_dispatches")
         self._h_fork_us = m.histogram("engine.fork_us")
         self._h_commit_us = m.histogram("engine.commit_us")
         self._h_prefill_us = m.histogram("engine.prefill_us")
+        self._h_checkpoint_us = m.histogram("tier.checkpoint_us")
+        self._h_restore_us = m.histogram("tier.restore_us")
         self._h_decode_us = m.histogram("engine.decode_step_us")
         self._h_batch = m.histogram("engine.batch_occupancy",
                                     lo=1.0, growth=2.0, buckets=12)
@@ -822,6 +955,12 @@ class ServeEngine:
     def verify_dispatches(self) -> int:
         """Fused spec-verify device calls."""
         return self._c_verify_dispatches.value
+
+    @property
+    def prefill_dispatches(self) -> int:
+        """Prefill device calls (dense or suffix-chunk) — a full
+        prefix-cache hit performs zero."""
+        return self._c_prefill_dispatches.value
 
     @staticmethod
     def _check_tp_divisibility(cfg: ArchConfig, tp: int) -> None:
@@ -860,54 +999,110 @@ class ServeEngine:
         self.v_scales = jax.device_put(self.v_scales, self._scale_sharding)
 
     # ------------------------------------------------------------------
+    def _scatter_prefill(self, pages: Sequence[int], k: jax.Array,
+                         v: jax.Array, n_tokens: int) -> None:
+        """Scatter ``n_tokens`` of per-layer K/V into ``pages``.
+
+        ``k``/``v`` are ``[L, n_tokens, kv, hd]``; token ``j`` lands in
+        ``pages[j // page_size]`` at offset ``j % page_size`` — callers
+        pass a page list whose first page starts at token offset 0 (the
+        suffix path slices its table at the page-aligned prefix
+        boundary).  int8 pools quantize per page/per-kv-head here.
+        """
+        for pi, page in enumerate(pages):
+            lo = pi * self.page_size
+            hi = min(lo + self.page_size, n_tokens)
+            if self.quantized:
+                # per-page/per-kv-head scale over the filled part
+                for pool, scales, src in (
+                        ("k_pages", "k_scales", k[:, lo:hi]),
+                        ("v_pages", "v_scales", v[:, lo:hi])):
+                    fp = src.astype(jnp.float32)   # [L, n, kv, hd]
+                    sc = jnp.maximum(
+                        jnp.max(jnp.abs(fp), axis=(1, 3)) / 127.0,
+                        1e-8)                      # [L, kv]
+                    q8 = jnp.clip(
+                        jnp.round(fp / sc[:, None, :, None]),
+                        -127, 127).astype(jnp.int8)
+                    setattr(self, pool, getattr(self, pool).at[
+                        :, page, : hi - lo].set(q8))
+                    setattr(self, scales, getattr(self, scales).at[
+                        :, page].set(sc))
+            else:
+                self.k_pages = self.k_pages.at[
+                    :, page, : hi - lo].set(k[:, lo:hi])
+                self.v_pages = self.v_pages.at[
+                    :, page, : hi - lo].set(v[:, lo:hi])
+        # eager scatter of an unsharded prefill cache can drift the
+        # pool's layout; re-pin so the hot loop never pays a
+        # per-step reshard at the shard_map boundary
+        self.k_pages = self._pin_kv(self.k_pages)
+        self.v_pages = self._pin_kv(self.v_pages)
+        self._pin_scales()
+
+    def _dense_prefill(self, sid: int, tokens: List[int]) -> None:
+        """Full-prompt prefill: dense forward, scatter into the table."""
+        toks = jnp.asarray(tokens, jnp.int32)[None]
+        _, cache = self.model.prefill(self.params, toks)
+        self._c_prefill_dispatches.inc()
+        self._scatter_prefill(self.kv.block_table(sid),
+                              cache["k"][:, 0], cache["v"][:, 0],
+                              len(tokens))
+
+    def _chunk_prefill(self, sid: int, tokens: List[int],
+                       covered: int) -> None:
+        """Suffix prefill: the first ``covered`` tokens are already in
+        shared prefix pages; compute KV only for the remainder, attending
+        to the shared pages through the block table (one dispatch)."""
+        table = self.kv.block_table(sid)
+        bt = np.zeros((1, self.max_pages), np.int32)
+        bt[0, :len(table)] = table
+        suffix = jnp.asarray(tokens[covered:], jnp.int32)[None]
+        args = (self.k_pages, self.v_pages, jnp.asarray(bt),
+                jnp.asarray([covered], jnp.int32), suffix)
+        if self.quantized:
+            args = args + (self.k_scales, self.v_scales)
+        if self._tp_prefix is not None:
+            k, v = self._tp_prefix(self.params, *args)
+        else:
+            k, v = paged_prefix_step(self.cfg, self.params, *args,
+                                     impl=self._chunk_impl)
+        self._c_prefill_dispatches.inc()
+        # the prefix boundary is page-aligned (partial tail pages only
+        # match whole prompts, which skip prefill entirely)
+        self._scatter_prefill(table[covered // self.page_size:],
+                              k[:, 0], v[:, 0], len(tokens) - covered)
+
     def add_request(self, prompt: Sequence[int]) -> int:
         """Prefill a prompt into a fresh paged sequence.
 
         Invariant: ``kv.length == len(tokens) - 1`` — the last token is
         "pending": its KV is written by the decode step that consumes it.
+
+        With ``prefix_cache`` enabled the prompt is first matched against
+        the cross-request prefix cache: cached page runs are adopted
+        CoW-shared into the new sequence's table, and only the uncovered
+        suffix is prefilled (zero dispatches on a whole-prompt hit — N
+        users sending the same prompt pay ONE prefill total).  The new
+        prompt's own pages are then registered for the next request.
         """
         prompt = list(prompt)
         assert prompt, "empty prompt"
         t0 = time.perf_counter_ns()
         n_cached = len(prompt) - 1
-        sid = self.kv.new_seq(length=n_cached)
-        if n_cached:
-            toks = jnp.asarray(prompt[:-1], jnp.int32)[None]
-            # dense prefill, then scatter the cache into this seq's pages
-            _, cache = self.model.prefill(self.params, toks)
-            table = self.kv.block_table(sid)
-            k = cache["k"][:, 0]      # [L, s, kv, hd]
-            v = cache["v"][:, 0]
-            for pi, page in enumerate(table):
-                lo = pi * self.page_size
-                hi = min(lo + self.page_size, n_cached)
-                if self.quantized:
-                    # per-page/per-kv-head scale over the filled part
-                    for pool, scales, src in (
-                            ("k_pages", "k_scales", k[:, lo:hi]),
-                            ("v_pages", "v_scales", v[:, lo:hi])):
-                        fp = src.astype(jnp.float32)   # [L, n, kv, hd]
-                        sc = jnp.maximum(
-                            jnp.max(jnp.abs(fp), axis=(1, 3)) / 127.0,
-                            1e-8)                      # [L, kv]
-                        q8 = jnp.clip(
-                            jnp.round(fp / sc[:, None, :, None]),
-                            -127, 127).astype(jnp.int8)
-                        setattr(self, pool, getattr(self, pool).at[
-                            :, page, : hi - lo].set(q8))
-                        setattr(self, scales, getattr(self, scales).at[
-                            :, page].set(sc))
-                else:
-                    self.k_pages = self.k_pages.at[
-                        :, page, : hi - lo].set(k[:, lo:hi])
-                    self.v_pages = self.v_pages.at[
-                        :, page, : hi - lo].set(v[:, lo:hi])
-            # eager scatter of an unsharded prefill cache can drift the
-            # pool's layout; re-pin so the hot loop never pays a
-            # per-step reshard at the shard_map boundary
-            self.k_pages = self._pin_kv(self.k_pages)
-            self.v_pages = self._pin_kv(self.v_pages)
-            self._pin_scales()
+        shared: List[int] = []
+        covered = 0
+        if self.prefix_cache and n_cached:
+            shared, covered = self.kv.match_prefix(prompt[:-1])
+        sid = self.kv.new_seq(length=n_cached,
+                              prefix_pages=shared or None)
+        if n_cached > covered:
+            if covered:
+                self._chunk_prefill(sid, prompt[:-1], covered)
+            else:
+                self._dense_prefill(sid, prompt[:-1])
+        if self.prefix_cache and n_cached:
+            self.kv.register_prefix(sid, prompt[:-1])
         self.token_domain.seed(sid, prompt)
         self._h_prefill_us.observe((time.perf_counter_ns() - t0) / 1000.0)
         return sid
@@ -963,6 +1158,71 @@ class ServeEngine:
             raise ValueError("cannot truncate below one token")
         self.kv.truncate(seq, n_tokens - 1)
         self.token_domain.truncate(seq, n_tokens)
+
+    # ------------------------------------------------------------------
+    # tiering: checkpoint (demote) / restore (promote)
+    # ------------------------------------------------------------------
+    def checkpoint(self, seq: int) -> int:
+        """Demote a branch's KV out of the device pool into the tier
+        store (host RAM, spilling to disk under pressure).
+
+        The snapshot carries the pages in the pool's native dtype (int8
+        pages travel with their per-page scales), the block-table shape
+        and the token tail, so :meth:`restore` is token-identical.  The
+        branch stays live — held in the lifecycle tree, invisible to
+        decode until restored.  Returns the number of device pages
+        freed.
+        """
+        t0 = time.perf_counter_ns()
+        table = self.kv.block_table(seq)      # raises ENOENT if unknown
+        length = self.kv.length(seq)
+        tokens = list(self.token_domain.get(seq))
+        idx = jnp.asarray(table, jnp.int32)
+        snap = KVSnapshot(
+            seq_id=seq, length=length, n_pages=len(table), tokens=tokens,
+            k_pages=np.asarray(self.k_pages[:, idx]),
+            v_pages=np.asarray(self.v_pages[:, idx]),
+            k_scales=(np.asarray(self.k_scales[:, idx])
+                      if self.quantized else None),
+            v_scales=(np.asarray(self.v_scales[:, idx])
+                      if self.quantized else None))
+        # demote AFTER the gather: it validates (live, leaf, not already
+        # tiered) and raises with the snapshot discarded and the device
+        # state untouched
+        self.kv.demote(seq)
+        self.tier.put(snap)
+        self._h_checkpoint_us.observe(
+            (time.perf_counter_ns() - t0) / 1000.0)
+        return len(table)
+
+    def restore(self, seq: int) -> None:
+        """Re-seat a tiered branch into freshly allocated device pages.
+
+        Fails with the snapshot intact and the branch still tiered if
+        the pool cannot fit it (``PoolExhausted``) — the caller demotes
+        something else and retries (the scheduler's demote-before-deny).
+        """
+        t0 = time.perf_counter_ns()
+        snap = self.tier.get(seq)             # ENOENT if never tiered
+        pages = self.kv.promote(seq)          # ENOSPC leaves snap stored
+        if pages:
+            idx = jnp.asarray(pages, jnp.int32)
+            self.k_pages = self._pin_kv(
+                self.k_pages.at[:, idx].set(jnp.asarray(snap.k_pages)))
+            self.v_pages = self._pin_kv(
+                self.v_pages.at[:, idx].set(jnp.asarray(snap.v_pages)))
+            if self.quantized and snap.k_scales is not None:
+                self.k_scales = self.k_scales.at[:, idx].set(
+                    jnp.asarray(snap.k_scales))
+                self.v_scales = self.v_scales.at[:, idx].set(
+                    jnp.asarray(snap.v_scales))
+                self._pin_scales()
+        self.token_domain.seed(seq, snap.tokens)
+        self.tier.drop(seq)
+        self._h_restore_us.observe((time.perf_counter_ns() - t0) / 1000.0)
+
+    def is_tiered(self, seq: int) -> bool:
+        return self.kv.is_tiered(seq)
 
     # ------------------------------------------------------------------
     def _service_cow(self, src: List[int], dst: List[int]) -> None:
@@ -1153,6 +1413,9 @@ class ServeEngine:
         st["cow_faults"] = self.cow_faults
         st["cow_inline_steps"] = self.cow_inline_steps
         st["verify_dispatches"] = self.verify_dispatches
+        st["prefill_dispatches"] = self.prefill_dispatches
+        st["prefix_cache"] = self.prefix_cache
+        st["tier_snapshots"] = len(self.tier)
         st["tp"] = self.tp
         st["attn_impl"] = self.attn_impl
         st["kv_dtype"] = self.kv_dtype or str(self.cfg.dtype)

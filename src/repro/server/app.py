@@ -354,6 +354,7 @@ class FrontDoor:
                 "worst_pages": rec.worst_pages,
                 "preemptible": rec.preemptible,
                 "priority": rec.priority,
+                "demoted": rec.demoted,
             }
             if rec.evict_reason:
                 out["evict_reason"] = rec.evict_reason

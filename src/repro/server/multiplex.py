@@ -297,16 +297,30 @@ class EngineLoop:
         rec = self.registry.by_req.get(head.req_id)
         if rec is None:
             return 0
-        evicted = 0
+        relieved = 0
         for victim in self.tenancy.victims_for(rec.priority):
             if sched.admission_deficit() <= 0:
                 break
+            # demote-before-deny: a parked victim's KV can leave the
+            # device (tier store) without losing anything — eviction is
+            # the escalation path, taken only when the victim cannot be
+            # checkpointed.  An already-tiered victim holds no device
+            # pages, so evicting it would free nothing: skip it.
+            if victim.kind == "parked":
+                if self.demote(victim,
+                               f"demoted by tenant {rec.tenant!r} "
+                               f"(priority {rec.priority} > "
+                               f"{victim.priority})"):
+                    relieved += 1
+                    continue
+                if victim.demoted:
+                    continue
             self.evict(victim,
                        f"preempted by tenant {rec.tenant!r} "
                        f"(priority {rec.priority} > {victim.priority})")
             self.tenancy.note_preemption()
-            evicted += 1
-        return evicted
+            relieved += 1
+        return relieved
 
     def _relieve_fork_pressure(self) -> int:
         """Same policy for a fork-blocked exploration (no FIFO head):
@@ -329,6 +343,52 @@ class EngineLoop:
                 self.tenancy.note_preemption()
                 return 1
         return 0
+
+    def demote(self, rec: ServedRequest, reason: str) -> bool:
+        """Checkpoint a parked victim's KV to the tier store in place of
+        eviction: its device pages are recycled but the record stays
+        live (tokens, reservation, handle all survive) and resumes via
+        ``session.restore``.  Returns False — caller decides between
+        skipping and :meth:`evict` — when the record has no root handle,
+        was already demoted, or the checkpoint itself fails."""
+        if rec.root_hd is None or rec.demoted:
+            return False
+        try:
+            self.session.checkpoint(rec.root_hd)
+        except BranchError:
+            # the scheduler's own demote-before-deny (admit()) may have
+            # tiered the branch already — adopt its bookkeeping
+            self._sync_demoted(rec)
+            return False
+        rec.demoted = True
+        self.tenancy.note_demotion()
+        self.emit(rec, "demoted",
+                  {"id": rec.sid, "events": [], "reason": reason})
+        return True
+
+    def _sync_demoted(self, rec: ServedRequest) -> None:
+        """Reflect scheduler-layer tiering into the server record.
+
+        ``Scheduler.admit`` checkpoints held branches on its own
+        (demote-before-deny is mechanical, below the priority policy);
+        the record's ``demoted`` flag, the ``server.demotions`` counter
+        and the ``demoted`` stream event must follow wherever the
+        demotion originated.  Restores flip the flag back silently."""
+        if rec.root_hd is None:
+            return
+        try:
+            tiered = bool(self.session.stat(rec.root_hd).get("tiered"))
+        except BranchError:
+            return      # handle raced a resolve; state is terminal
+        if tiered and not rec.demoted:
+            rec.demoted = True
+            self.tenancy.note_demotion()
+            self.emit(rec, "demoted", {
+                "id": rec.sid, "events": [],
+                "reason": "page pressure: KV checkpointed to the tier "
+                          "store (demote-before-deny)"})
+        elif not tiered and rec.demoted:
+            rec.demoted = False
 
     def evict(self, rec: ServedRequest, reason: str) -> None:
         """Force-finish a record: reservations freed, committed chain
@@ -411,6 +471,8 @@ class EngineLoop:
         self._g_streams.set(len(self.registry.live))
 
     def _publish_parked(self, rec: ServedRequest) -> None:
+        if rec.sent_admitted:
+            self._sync_demoted(rec)
         if not rec.sent_admitted and rec.root_hd is not None:
             try:
                 admitted = self.session.admitted(rec.root_hd)

@@ -100,6 +100,7 @@ class ServedRequest:
     result: Optional[Dict[str, Any]] = None
     error: Optional[str] = None
     evict_reason: Optional[str] = None
+    demoted: bool = False               # KV checkpointed to the tier store
 
     @property
     def live(self) -> bool:
@@ -128,6 +129,7 @@ class TenancyManager:
         self._c_quota = m.counter("server.quota_429")
         self._c_enospc = m.counter("server.rejected_enospc")
         self._c_preempt = m.counter("server.preemptions")
+        self._c_demote = m.counter("server.demotions")
 
     # ------------------------------------------------------------------
     # tenant registry
@@ -229,6 +231,11 @@ class TenancyManager:
 
     def note_preemption(self) -> None:
         self._c_preempt.inc()
+
+    def note_demotion(self) -> None:
+        """A victim was demoted to the tier store instead of evicted —
+        it keeps its tokens and resumes later, losing nothing."""
+        self._c_demote.inc()
 
     # ------------------------------------------------------------------
     def usage(self) -> Dict[str, Dict[str, Any]]:

@@ -1,0 +1,248 @@
+"""Tiered KV pool (device -> host -> disk) + cross-request prefix sharing.
+
+Acceptance surface for the tiered-pool design (DESIGN §16):
+
+* N requests with an identical prompt cost exactly ONE prefill dispatch
+  (the repeats adopt the cached CoW pages);
+* a partial prefix hit chunk-prefills only the uncovered suffix and the
+  adopter decodes token-identically to an uncached control;
+* checkpoint -> reuse-the-pool -> restore round-trips are
+  token-identical under fp32 AND int8 KV;
+* the tier store spills least-recently-used snapshots to disk and loads
+  them back transparently;
+* the scheduler demotes held branches before denying admission, and the
+  session exposes checkpoint/restore verbs plus the BR_TIERED stat.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.api import AdmissionDenied, BranchError, BranchSession, Errno
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.runtime.scheduler import Scheduler, SchedulerConfig
+from repro.runtime.serve_loop import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = dataclasses.replace(get_config("paper-agentic"), dtype="float32")
+    model = Model(cfg, attn_chunk=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def fresh_engine(engine_setup, **kw):
+    cfg, model, params = engine_setup
+    kw.setdefault("num_pages", 128)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_pages_per_seq", 16)
+    return ServeEngine(model, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# cross-request prefix sharing
+# ---------------------------------------------------------------------------
+
+def test_identical_prompts_cost_one_prefill(engine_setup):
+    """Best-of-N from N users: one prefill total, N-1 adoptions."""
+    prompt = list(range(2, 19))          # 16 cached tokens = 4 full pages
+
+    ctrl = fresh_engine(engine_setup)
+    c = ctrl.add_request(prompt)
+    want = [ctrl.decode([c])[0] for _ in range(6)]
+
+    eng = fresh_engine(engine_setup, prefix_cache=True)
+    sids = [eng.add_request(prompt) for _ in range(4)]
+    assert eng.prefill_dispatches == 1
+    m = eng.obs.metrics
+    assert m.counter("kv.prefix_hits").value == 3
+    assert eng.kv.stats()["prefix_pages_cached"] >= 4
+
+    # every adopter decodes exactly like the uncached control
+    for sid in sids:
+        assert [eng.decode([sid])[0] for _ in range(6)] == want
+
+
+def test_partial_prefix_hit_chunk_prefills_suffix(engine_setup):
+    """A shared head adopts cached pages; only the divergent suffix is
+    prefilled — and the result is token-identical to an uncached run."""
+    base = list(range(1, 14))                     # 12 cached = 3 pages
+    variant = base[:9] + [50, 51, 52, 53]         # shares 2 full pages
+
+    ctrl = fresh_engine(engine_setup)
+    c = ctrl.add_request(variant)
+    want = [ctrl.decode([c])[0] for _ in range(6)]
+
+    eng = fresh_engine(engine_setup, prefix_cache=True)
+    eng.add_request(base)                         # populates the cache
+    d0 = eng.prefill_dispatches
+    sid = eng.add_request(variant)
+    assert eng.prefill_dispatches == d0 + 1       # suffix chunk only
+    assert eng.obs.metrics.counter("kv.prefix_hits").value >= 1
+    assert [eng.decode([sid])[0] for _ in range(6)] == want
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"],
+                         ids=["fp32", "int8"])
+def test_checkpoint_restore_round_trip_token_identical(engine_setup,
+                                                       kv_dtype):
+    kw = {} if kv_dtype is None else {"kv_dtype": kv_dtype}
+    prompt = [5, 17, 3, 42, 7]
+
+    ctrl = fresh_engine(engine_setup, **kw)
+    c = ctrl.add_request(prompt)
+    want = [ctrl.decode([c])[0] for _ in range(8)]
+
+    eng = fresh_engine(engine_setup, **kw)
+    sid = eng.add_request(prompt)
+    got = [eng.decode([sid])[0] for _ in range(4)]
+
+    free0 = eng.stats()["pages_free"]
+    freed = eng.checkpoint(sid)
+    assert freed > 0
+    assert eng.is_tiered(sid)
+    assert eng.stats()["pages_free"] == free0 + freed
+    # a tiered branch cannot decode until restored
+    with pytest.raises(BranchError) as ei:
+        eng.decode([sid])
+    assert ei.value.errno is Errno.EAGAIN
+
+    # the freed pages are real: other work can use them meanwhile
+    other = eng.add_request([9, 9, 9, 9])
+    for _ in range(4):
+        eng.decode([other])
+    eng.release(other)
+
+    eng.restore(sid)
+    assert not eng.is_tiered(sid)
+    got += [eng.decode([sid])[0] for _ in range(4)]
+    assert got == want                  # token-identical across the trip
+
+
+def test_tier_spills_to_disk_and_loads_back(engine_setup, tmp_path):
+    eng = fresh_engine(engine_setup, tier_host_bytes=1024,
+                       tier_disk_dir=str(tmp_path))
+    a = eng.add_request([1, 2, 3, 4, 5])
+    b = eng.add_request([6, 7, 8, 9, 10])
+    got_a = [eng.decode([a])[0] for _ in range(3)]
+    got_b = [eng.decode([b])[0] for _ in range(3)]
+    eng.checkpoint(a)
+    eng.checkpoint(b)
+    m = eng.obs.metrics
+    assert m.counter("tier.spills").value >= 1    # 1 KiB budget: spilled
+    assert any(tmp_path.iterdir())
+
+    eng.restore(a)
+    eng.restore(b)
+    assert m.counter("tier.disk_loads").value >= 1
+    got_a += [eng.decode([a])[0] for _ in range(3)]
+    got_b += [eng.decode([b])[0] for _ in range(3)]
+
+    ctrl = fresh_engine(engine_setup)
+    ca = ctrl.add_request([1, 2, 3, 4, 5])
+    cb = ctrl.add_request([6, 7, 8, 9, 10])
+    assert got_a == [ctrl.decode([ca])[0] for _ in range(6)]
+    assert got_b == [ctrl.decode([cb])[0] for _ in range(6)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler: demote-before-deny
+# ---------------------------------------------------------------------------
+
+def test_scheduler_demotes_held_before_denying(engine_setup):
+    eng = fresh_engine(engine_setup, num_pages=24)
+    sched = Scheduler(eng, SchedulerConfig(max_batch=8))
+    held = []
+    for i in range(3):
+        rid = sched.submit([i + 1, i + 2, i + 3, i + 4], max_new_tokens=24)
+        sched.admit()
+        seq = sched.seq_of(rid)
+        sched.hold(seq)
+        held.append(seq)
+
+    # the pool is fully reserved; a new request would be denied without
+    # tiering — instead one held branch is checkpointed, losslessly
+    rid = sched.submit([9, 9, 9, 9], max_new_tokens=24)
+    admitted = sched.admit()
+    assert admitted == [sched.seq_of(rid)]
+    assert sched.stats()["checkpointed"] == 1
+    tiered = [s for s in held if sched.is_checkpointed(s)]
+    assert len(tiered) == 1
+
+    # a tiered branch cannot rejoin the batch without a restore
+    with pytest.raises(BranchError) as ei:
+        sched.unhold(tiered[0])
+    assert ei.value.errno is Errno.EAGAIN
+    # and the ledger is honest: restoring now would overcommit the pool
+    with pytest.raises(AdmissionDenied):
+        sched.restore(tiered[0])
+
+    # run the admitted request to completion; its reservation frees
+    for _ in range(30):
+        if sched.step()["running"] <= 3:
+            break
+    sched.restore(tiered[0], unhold=True)
+    assert not sched.is_checkpointed(tiered[0])
+    assert sched.stats()["checkpointed"] == 0
+    # the restored branch decodes again (it left the hold set)
+    before = len(eng.tokens(tiered[0]))
+    sched.step()
+    assert len(eng.tokens(tiered[0])) == before + 1
+
+
+# ---------------------------------------------------------------------------
+# session verbs + BR_TIERED stat
+# ---------------------------------------------------------------------------
+
+def test_session_checkpoint_restore_verbs_and_stat(engine_setup):
+    cfg, model, params = engine_setup
+    engine = fresh_engine(engine_setup)
+    s = BranchSession(engine, max_batch=8, seed=11)
+    hd = s.open([1, 2, 3], 12)
+    assert s.admitted(hd)
+    for _ in range(3):
+        s.step()
+
+    freed = s.checkpoint(hd)
+    assert freed > 0
+    st = s.stat(hd)
+    assert st["tiered"] is True
+    assert "BR_TIERED" in st["flags"]
+    assert st["pages"] == 0             # device table empty while tiered
+    toks = s.tokens(hd)                 # token tail survives the demotion
+    s.step()                            # the session keeps serving
+
+    s.restore(hd, resume=False)
+    st = s.stat(hd)
+    assert st["tiered"] is False
+    assert "BR_TIERED" not in st["flags"]
+    assert s.tokens(hd) == toks
+    s.finish(hd)
+
+
+def test_resume_transparently_restores_demoted_branch(engine_setup):
+    """Demote-before-deny must be invisible to pacing callers: resume on
+    a checkpointed branch restores the snapshot and unparks in one verb
+    (the exploration driver decodes demoted contexts through this)."""
+    engine = fresh_engine(engine_setup)
+    s = BranchSession(engine, max_batch=8, seed=11)
+    hd = s.open([1, 2, 3], 12)
+    for _ in range(3):
+        s.step()
+    s.checkpoint(hd)
+    assert s.stat(hd)["tiered"] is True
+    toks = s.tokens(hd)
+
+    s.resume(hd, greedy=True)            # restore + unhold in one verb
+    assert s.stat(hd)["tiered"] is False
+    assert s.tokens(hd) == toks          # token-identical round trip
+    s.step()
+    assert len(s.tokens(hd)) == len(toks) + 1
+    s.finish(hd)

@@ -1,10 +1,17 @@
 """KVBranchManager: CoW page tables, refcounts, fork/commit/abort."""
 
+import os
+import random
+import subprocess
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
 
 from repro.core import KVBranchManager, SeqStatus, StaleBranchError
-from repro.core.errors import BranchStateError, FrozenOriginError
+from repro.core.errors import (BranchError, BranchStateError, Errno,
+                               FrozenOriginError)
 
 
 @pytest.fixture
@@ -174,3 +181,158 @@ def test_stats(kv):
     st = kv.stats()
     assert st["pages_shared"] == 2
     assert st["sequences_live"] == 3
+
+
+# ---------------------------------------------------------------------------
+# double-release hardening: _decref validates BEFORE mutating, raises
+# BranchError(EINVAL), and the guard survives ``python -O``
+# ---------------------------------------------------------------------------
+
+def test_double_release_raises_einval_allocator_untouched(kv):
+    sid = kv.new_seq(length=8)
+    pages = kv.block_table(sid)
+    kv.release(sid)
+    free_before = kv.free_pages
+    with pytest.raises(BranchError) as ei:
+        kv._decref(pages)
+    assert ei.value.errno is Errno.EINVAL
+    # validate-before-mutate: nothing re-entered the free list, no
+    # refcount went negative
+    assert kv.free_pages == free_before
+    assert all(kv.refcount(p) == 0 for p in pages)
+    # the pool still hands out every page exactly once
+    seen = kv.block_table(kv.new_seq(length=64 * 4))
+    assert len(seen) == len(set(seen)) == 64
+
+
+def test_decref_is_occurrence_aware(kv):
+    # a page listed k times needs k outstanding references — one ref
+    # plus a duplicate entry must NOT free it and then free it again
+    sid = kv.new_seq(length=4)
+    (p,) = kv.block_table(sid)
+    assert kv.refcount(p) == 1
+    with pytest.raises(BranchError) as ei:
+        kv._decref([p, p])
+    assert ei.value.errno is Errno.EINVAL
+    assert kv.refcount(p) == 1
+    assert kv.free_pages == 63
+    kv.prepare_append(sid)  # the sequence is still fully usable
+
+
+def test_truncate_then_release_shared_pages_stay_consistent(kv):
+    # the historical corruption: truncate dropped a shared page's ref,
+    # then releasing the fork origin freed it again, double-inserting it
+    # into the free list
+    sid = kv.new_seq(length=16)               # 4 pages
+    (child,) = kv.fork(sid)
+    kv.truncate(child, 4)                     # drops 3 shared refs
+    shared = kv.block_table(sid)
+    assert [kv.refcount(p) for p in shared] == [2, 1, 1, 1]
+    kv.release(child)
+    kv.release(sid)
+    assert kv.free_pages == 64
+    # every page is free exactly once: drain the pool and check dupes
+    drained = kv.block_table(kv.new_seq(length=64 * 4))
+    assert len(set(drained)) == 64
+
+
+def test_double_release_guard_survives_python_O(tmp_path):
+    # ``python -O`` strips assert statements; the guard must be a real
+    # raise.  Run the double release in an optimized subprocess.
+    import repro
+    src = str(Path(repro.__file__).resolve().parents[1])
+    code = "\n".join([
+        "from repro.core import KVBranchManager",
+        "from repro.core.errors import BranchError, Errno",
+        "kv = KVBranchManager(num_pages=8, page_size=4)",
+        "sid = kv.new_seq(length=4)",
+        "pages = kv.block_table(sid)",
+        "kv.release(sid)",
+        "try:",
+        "    kv._decref(pages)",
+        "except BranchError as e:",
+        "    if e.errno is not Errno.EINVAL:",
+        "        raise SystemExit(f'wrong errno: {e.errno!r}')",
+        "    print('GUARDED', kv.free_pages)",
+        "else:",
+        "    raise SystemExit('double release silently succeeded under -O')",
+    ])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-O", "-c", code],
+                          capture_output=True, text=True, env=env,
+                          timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "GUARDED 8" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# randomized interleavings: refcounts always equal live-table +
+# prefix-registry references, and the free list never double-lists
+# ---------------------------------------------------------------------------
+
+def _check_refcount_invariants(kv):
+    from collections import Counter
+    refs = Counter()
+    for s, table in kv._tables.items():
+        if kv.is_live(s):
+            refs.update(table)
+    refs.update(kv._prefix_pages.values())
+    for p in range(kv.num_pages):
+        assert kv.refcount(p) == refs[p], (
+            f"page {p}: refcount {kv.refcount(p)} != {refs[p]} references")
+    free = list(kv._free)
+    assert len(free) == len(set(free)), "free list double-lists a page"
+    assert set(free) == {p for p in range(kv.num_pages)
+                         if kv.refcount(p) == 0}, (
+        "free list out of sync with zero-refcount pages")
+
+
+def test_random_op_interleavings_preserve_invariants():
+    rng = random.Random(0xC0FFEE)
+    kv = KVBranchManager(num_pages=48, page_size=4)
+    for step in range(600):
+        live = [s for s in list(kv._tables)
+                if kv.is_live(s) and not kv.is_tiered(s)]
+        tiered = [s for s in list(kv._tiered_pages) if kv.is_live(s)]
+        ops = ["new", "adopt"]
+        if live:
+            ops += ["append", "fork", "release", "truncate", "commit",
+                    "abort", "demote", "register"]
+        if tiered:
+            ops += ["promote", "release_tiered"]
+        op = rng.choice(ops)
+        try:
+            if op == "new":
+                kv.new_seq(length=rng.randrange(0, 13))
+            elif op == "adopt":
+                toks = [rng.randrange(1, 9) for _ in range(8)]
+                pages, covered = kv.match_prefix(toks)
+                kv.new_seq(length=max(covered, rng.randrange(0, 13)),
+                           prefix_pages=pages)
+            elif op == "append":
+                kv.prepare_append(rng.choice(live), rng.randrange(1, 6))
+            elif op == "fork":
+                kv.fork(rng.choice(live), n=rng.randrange(1, 3))
+            elif op == "release":
+                kv.release(rng.choice(live))
+            elif op == "truncate":
+                s = rng.choice(live)
+                kv.truncate(s, rng.randrange(0, kv.length(s) + 1))
+            elif op == "commit":
+                kv.commit(rng.choice(live))
+            elif op == "abort":
+                kv.abort(rng.choice(live))
+            elif op == "demote":
+                kv.demote(rng.choice(live))
+            elif op == "register":
+                s = rng.choice(live)
+                toks = [rng.randrange(1, 9) for _ in range(kv.length(s))]
+                kv.register_prefix(s, toks)
+            elif op == "promote":
+                kv.promote(rng.choice(tiered))
+            elif op == "release_tiered":
+                kv.release(rng.choice(tiered))
+        except (BranchError, MemoryError, ValueError):
+            pass  # rejected ops must leave state consistent too
+        _check_refcount_invariants(kv)

@@ -312,3 +312,78 @@ def test_nesting_depth_commit_chain(depth):
     for b in reversed(chain[1:]):
         store.commit(b)
     assert store.read(BranchStore.ROOT, "v") == depth
+
+
+# ---------------------------------------------------------------------------
+# KV pool: refcounts vs. live references under random op interleavings
+# ---------------------------------------------------------------------------
+
+_KV_OPS = st.sampled_from(
+    ["new", "adopt", "append", "fork", "release", "truncate", "commit",
+     "abort", "demote", "promote", "register"])
+kv_op_st = st.tuples(_KV_OPS, st.integers(0, 999), st.integers(0, 15))
+
+
+@settings(max_examples=150, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(kv_op_st, max_size=32))
+def test_kv_refcounts_match_live_references(ops):
+    """After ANY interleaving of pool ops — including rejected ones —
+    every page's refcount equals its live-table references plus its
+    prefix-registry references, and the free list is exactly the
+    zero-refcount pages, each listed once (no double-assignment)."""
+    from collections import Counter
+
+    from repro.core import KVBranchManager
+
+    kv = KVBranchManager(num_pages=24, page_size=2)
+    for name, pick, amt in ops:
+        live = [s for s in list(kv._tables)
+                if kv.is_live(s) and not kv.is_tiered(s)]
+        tiered = [s for s in list(kv._tiered_pages) if kv.is_live(s)]
+        try:
+            if name == "new":
+                kv.new_seq(length=amt)
+            elif name == "adopt":
+                toks = [(pick + i) % 5 + 1 for i in range(6)]
+                pages, covered = kv.match_prefix(toks)
+                kv.new_seq(length=max(covered, amt), prefix_pages=pages)
+            elif name == "promote":
+                if tiered:
+                    kv.promote(tiered[pick % len(tiered)])
+            elif not live:
+                continue
+            elif name == "append":
+                kv.prepare_append(live[pick % len(live)], amt % 4 + 1)
+            elif name == "fork":
+                kv.fork(live[pick % len(live)], n=amt % 2 + 1)
+            elif name == "release":
+                kv.release(live[pick % len(live)])
+            elif name == "truncate":
+                s = live[pick % len(live)]
+                kv.truncate(s, amt % (kv.length(s) + 1))
+            elif name == "commit":
+                kv.commit(live[pick % len(live)])
+            elif name == "abort":
+                kv.abort(live[pick % len(live)])
+            elif name == "demote":
+                kv.demote(live[pick % len(live)])
+            elif name == "register":
+                s = live[pick % len(live)]
+                kv.register_prefix(
+                    s, [(pick + i) % 5 + 1 for i in range(kv.length(s))])
+        except (BranchError, MemoryError, ValueError):
+            pass  # rejected ops must also leave the pool consistent
+        refs = Counter()
+        for s, table in kv._tables.items():
+            if kv.is_live(s):
+                refs.update(table)
+        refs.update(kv._prefix_pages.values())
+        for p in range(kv.num_pages):
+            assert kv.refcount(p) == refs[p], (
+                f"page {p}: refcount {kv.refcount(p)} != {refs[p]} refs "
+                f"after {name}")
+        free = list(kv._free)
+        assert len(free) == len(set(free)), "free list double-lists a page"
+        assert set(free) == {p for p in range(kv.num_pages)
+                             if refs[p] == 0}
